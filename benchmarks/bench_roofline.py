@@ -1,0 +1,41 @@
+"""Aggregate the dry-run JSONs into the §Roofline table.
+
+Reads results/dryrun/*.json (produced by ``python -m repro.launch.dryrun``)
+and emits one CSV row per (mesh × arch × shape) with the three roofline
+terms, the dominant bottleneck, and the useful-FLOPs ratio.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "../results/dryrun")
+
+
+def roofline_table(emit=print, results_dir: str = RESULTS):
+    files = sorted(glob.glob(os.path.join(results_dir, "*.json")))
+    if not files:
+        emit("roofline_table,0.0,no_dryrun_results_found")
+        return {}
+    rows = {}
+    for path in files:
+        with open(path) as f:
+            res = json.load(f)
+        tag = f"{res.get('mesh','skip')}_{res['arch']}_{res['shape']}"
+        if "skipped" in res:
+            emit(f"roofline_{tag},0.0,skipped={res['skipped'].replace(',',';')}")
+            continue
+        r = res["roofline"]
+        ufr = res.get("useful_flops_ratio")
+        emit(
+            f"roofline_{tag},{res['compile_s']*1e6:.0f},"
+            f"compute_ms={r['compute_s']*1e3:.3f};"
+            f"memory_ms={r['memory_s']*1e3:.3f};"
+            f"collective_ms={r['collective_s']*1e3:.3f};"
+            f"dominant={r['dominant']};"
+            f"useful_flops_ratio={(f'{ufr:.3f}' if ufr else 'n/a')};"
+            f"temp_GiB={res['memory']['temp_bytes']/2**30:.2f}"
+        )
+        rows[tag] = r
+    return rows

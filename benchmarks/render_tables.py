@@ -1,0 +1,126 @@
+"""Render the §Dry-run and §Roofline markdown tables from results/dryrun.
+
+Usage: PYTHONPATH=src python -m benchmarks.render_tables
+Rewrites the <!-- DRYRUN_TABLE --> and <!-- ROOFLINE_TABLE --> blocks of
+EXPERIMENTS.md in place (idempotent).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+RESULTS = os.path.join(ROOT, "results/dryrun")
+EXPERIMENTS = os.path.join(ROOT, "EXPERIMENTS.md")
+
+ARCH_ORDER = [
+    "qwen2-7b", "codeqwen1.5-7b", "qwen3-32b", "qwen1.5-32b",
+    "deepseek-moe-16b", "olmoe-1b-7b", "jamba-1.5-large-398b",
+    "rwkv6-7b", "whisper-large-v3", "llava-next-mistral-7b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(results_dir=RESULTS):
+    rows = {}
+    for path in glob.glob(os.path.join(results_dir, "*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("method", "fedlrt") != "fedlrt":
+            continue
+        key = (r.get("mesh", "skip"), r["arch"], r["shape"])
+        rows[key] = r
+    return rows
+
+
+def dryrun_table(rows) -> str:
+    out = [
+        "| arch | shape | 16×16: compile / temp GiB/dev | 2×16×16: compile / temp GiB/dev |",
+        "|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            single = rows.get(("16x16", arch, shape))
+            multi = rows.get(("2x16x16", arch, shape))
+            skip = rows.get(("skip", arch, shape))
+            if single is None and multi is None:
+                reason = (skip or {}).get("skipped", "?")
+                out.append(f"| {arch} | {shape} | SKIP — {reason} | SKIP |")
+                continue
+
+            def cell(r):
+                if r is None:
+                    return "—"
+                return (
+                    f"{r['compile_s']:.0f}s / "
+                    f"{r['memory']['temp_bytes']/2**30:.2f}"
+                )
+
+            out.append(f"| {arch} | {shape} | {cell(single)} | {cell(multi)} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows, opt_rows=None) -> str:
+    opt_rows = opt_rows or {}
+    out = [
+        "| arch | shape | compute ms (HLO / analytic) | memory ms | collective ms (baseline → optimized) | dominant | MODEL_FLOPS/HLO_FLOPs | what would move the dominant term |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    advice = {
+        ("memory", "train"): "larger per-chip batch / fewer remat recomputes (raise arithmetic intensity)",
+        ("memory", "decode"): "KV-cache quantization (int8) or wider model-axis cache sharding",
+        ("memory", "prefill"): "flash-style fused attention (skip score materialization)",
+        ("collective", "train"): "overlap basis-gradient all-reduce with coefficient compute; reduce resharding between seq- and head-sharded layouts",
+        ("collective", "prefill"): "keep activations seq-sharded through attention (ring attention) to avoid k/v gathers",
+        ("collective", "decode"): "replicate small caches instead of gathering per step",
+        ("compute", "train"): "pallas-fused low-rank chain (fewer HBM round-trips)",
+    }
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = rows.get(("16x16", arch, shape))
+            if r is None:
+                continue
+            rf = r["roofline"]
+            kind = "train" if shape.startswith("train") else (
+                "prefill" if "prefill" in shape else "decode"
+            )
+            ufr = r.get("useful_flops_ratio")
+            analytic_ms = r["model_flops_per_device"] / 197e12 * 1e3
+            o = opt_rows.get(("16x16", arch, shape))
+            coll = f"{rf['collective_s']*1e3:.2f}"
+            if o is not None:
+                coll += f" → {o['roofline']['collective_s']*1e3:.2f}"
+            out.append(
+                f"| {arch} | {shape} | {rf['compute_s']*1e3:.2f} / "
+                f"{analytic_ms:.2f} | "
+                f"{rf['memory_s']*1e3:.2f} | {coll} | "
+                f"**{rf['dominant']}** | "
+                f"{(f'{ufr:.2f}' if ufr else 'n/a')} | "
+                f"{advice.get((rf['dominant'], kind), '-')} |"
+            )
+    return "\n".join(out)
+
+
+def replace_block(text: str, marker: str, content: str) -> str:
+    pattern = re.compile(
+        rf"<!-- {marker} -->.*?(?=\n## |\Z)", re.S
+    )
+    return pattern.sub(f"<!-- {marker} -->\n\n{content}\n\n", text)
+
+
+def main():
+    rows = load()
+    opt = load(os.path.join(ROOT, "results/dryrun_opt"))
+    with open(EXPERIMENTS) as f:
+        text = f.read()
+    text = replace_block(text, "DRYRUN_TABLE", dryrun_table(rows))
+    text = replace_block(text, "ROOFLINE_TABLE", roofline_table(rows, opt))
+    with open(EXPERIMENTS, "w") as f:
+        f.write(text)
+    print(f"rendered {len(rows)} baseline + {len(opt)} optimized rows")
+
+
+if __name__ == "__main__":
+    main()

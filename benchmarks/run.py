@@ -1,0 +1,66 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  fig1_*       §4.1 heterogeneous least squares (variance correction)
+  fig4_*       §4.1 homogeneous least squares (rank identification)
+  fig3_*       communication/compute scaling + amortization point
+  table1_*     measured vs analytic per-round communication
+  fig5_*       CV proxy: accuracy vs client count, non-iid
+  kernel_*     low-rank chain vs dense matmul + Pallas interpret check
+  roofline_*   dry-run roofline terms (requires results/dryrun/*.json)
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="fewer rounds")
+    ap.add_argument(
+        "--only", type=str, default=None,
+        help="comma-separated subset: lsq,costs,cv,kernels,roofline",
+    )
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    q = args.quick
+
+    def want(name):
+        return only is None or name in only
+
+    print("name,us_per_call,derived")
+    if want("lsq"):
+        from benchmarks.bench_lsq import fig1_heterogeneous, fig4_homogeneous
+
+        fig4_homogeneous(rounds=60 if q else 150)
+        fig1_heterogeneous(rounds=80 if q else 200)
+    if want("costs"):
+        from benchmarks.bench_costs import fig3_scaling, table1_measured
+
+        fig3_scaling()
+        table1_measured()
+    if want("cv"):
+        from benchmarks.bench_cv import fig5_proxy
+
+        fig5_proxy(rounds=10 if q else 25, clients=(2, 4) if q else (2, 4, 8))
+    if want("kernels"):
+        from benchmarks.bench_kernels import chain_vs_dense
+
+        chain_vs_dense()
+    if want("ablation"):
+        from benchmarks.bench_ablation import s_star_ablation, tau_ablation
+
+        tau_ablation(rounds=50 if q else 120)
+        s_star_ablation()
+    if want("roofline"):
+        from benchmarks.bench_roofline import roofline_table
+
+        roofline_table()
+    sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

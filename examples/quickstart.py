@@ -1,0 +1,52 @@
+"""Quickstart: FeDLRT on the paper's homogeneous least-squares test (§4.1).
+
+Shows the whole public API in ~40 lines: a factorized parameter, a loss,
+a FedConfig, and the round function.  Reproduces the headline behavior of
+Fig. 4 — FeDLRT identifies the planted rank (4) within a few aggregation
+rounds, never underestimates it, and converges to the global minimizer.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import FedConfig, fedlrt_round, init_factor, materialize
+from repro.data import make_homogeneous_lsq
+
+
+def loss_fn(f, batch):
+    pred = jnp.sum(((batch["px"] @ f.U) @ f.S) * (batch["py"] @ f.V), -1)
+    return 0.5 * jnp.mean((pred - batch["t"]) ** 2)
+
+
+def main():
+    prob = make_homogeneous_lsq(n=20, rank=4, num_points=4000, num_clients=4)
+    batches = {
+        "px": jnp.asarray(prob.px),
+        "py": jnp.asarray(prob.py),
+        "t": jnp.asarray(prob.target),
+    }
+
+    params = init_factor(
+        jax.random.PRNGKey(0), 20, 20, r_max=10, init_rank=10, spectrum_scale=1.0
+    )
+    cfg = FedConfig(
+        num_clients=4, s_star=20, lr=0.1, correction="full", tau=0.1
+    )
+    step = jax.jit(lambda p, b: fedlrt_round(loss_fn, p, b, cfg))
+
+    print(f"target rank: {prob.rank_star}")
+    for t in range(1, 101):
+        params, metrics = step(params, batches)
+        if t % 10 == 0 or t == 1:
+            dist = float(jnp.linalg.norm(materialize(params) - prob.W_star))
+            print(
+                f"round {t:3d}  loss={float(metrics['loss_before']):.3e}  "
+                f"rank={int(params.rank)}  ‖W−W*‖={dist:.3e}  "
+                f"comm={float(metrics['comm_bytes_per_client'])/1e3:.1f} KB/client"
+            )
+    assert int(params.rank) == prob.rank_star
+
+
+if __name__ == "__main__":
+    main()

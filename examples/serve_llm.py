@@ -1,0 +1,15 @@
+"""Batched-serving example (4th example app).
+
+Spins up the BatchedServer on a reduced registry architecture and decodes
+a batch of random prompts — prefill + KV-cached greedy decode, the same
+`serve_step` the decode dry-run shapes lower on the production mesh.
+
+Run:  PYTHONPATH=src python examples/serve_llm.py --arch rwkv6-7b --smoke
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    args = sys.argv[1:] or ["--preset", "llm-tiny", "--new-tokens", "16"]
+    main(args)

@@ -1,0 +1,90 @@
+"""Self-describing npz checkpoints for factorized parameter pytrees.
+
+Factor leaves are stored field-wise (``<path>@U/S/V/rank``), so a restored
+checkpoint reproduces the exact LowRankFactor objects — including each
+layer's adaptive rank — without needing a template pytree.  Metadata
+(round index, method, anything json-serializable) rides along under
+``__meta__``.
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.factorization import LowRankFactor, is_factor
+
+_SEP = "|"  # path separator safe for npz keys
+
+
+def _flatten(tree, prefix="") -> Dict[str, Any]:
+    out = {}
+    if is_factor(tree):
+        out[prefix + "@U"] = tree.U
+        out[prefix + "@S"] = tree.S
+        out[prefix + "@V"] = tree.V
+        out[prefix + "@rank"] = tree.rank
+        return out
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, prefix + _SEP + str(k) if prefix else str(k)))
+        return out
+    out[prefix] = tree
+    return out
+
+
+def save_checkpoint(path: str, params, *, meta: Optional[dict] = None):
+    flat = {k: np.asarray(jax.device_get(v)) for k, v in _flatten(params).items()}
+    flat["__meta__"] = np.frombuffer(
+        json.dumps(meta or {}).encode(), dtype=np.uint8
+    ).copy()
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)
+
+
+def load_checkpoint(path: str):
+    """Returns (params, meta)."""
+    with np.load(path) as z:
+        flat = {k: z[k] for k in z.files}
+    meta = json.loads(bytes(flat.pop("__meta__")).decode()) if "__meta__" in flat else {}
+
+    # group factor fields
+    factors: Dict[str, dict] = {}
+    plain: Dict[str, np.ndarray] = {}
+    for k, v in flat.items():
+        if "@" in k:
+            base, field = k.rsplit("@", 1)
+            factors.setdefault(base, {})[field] = v
+        else:
+            plain[k] = v
+
+    tree: dict = {}
+
+    def insert(path: str, value):
+        parts = path.split(_SEP)
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = value
+
+    for k, v in plain.items():
+        insert(k, jnp.asarray(v))
+    for k, fields in factors.items():
+        insert(
+            k,
+            LowRankFactor(
+                U=jnp.asarray(fields["U"]),
+                S=jnp.asarray(fields["S"]),
+                V=jnp.asarray(fields["V"]),
+                rank=jnp.asarray(fields["rank"]),
+            ),
+        )
+    return tree, meta

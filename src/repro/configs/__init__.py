@@ -1,0 +1,48 @@
+"""Architecture registry: the 10 assigned configs (+ paper test problems).
+
+Each ``<arch>.py`` module exposes ``CONFIG: ModelConfig`` with the exact
+published dimensions (source cited in the module docstring).  Reduced smoke
+variants come from :func:`repro.models.config.reduced`.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig, reduced  # noqa: F401
+
+ARCH_IDS = (
+    "qwen2_7b",
+    "deepseek_moe_16b",
+    "whisper_large_v3",
+    "codeqwen15_7b",
+    "qwen3_32b",
+    "llava_next_mistral_7b",
+    "jamba_15_large",
+    "qwen15_32b",
+    "olmoe_1b_7b",
+    "rwkv6_7b",
+)
+
+# CLI ids (dashes) → module names
+ALIASES = {
+    "qwen2-7b": "qwen2_7b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "whisper-large-v3": "whisper_large_v3",
+    "codeqwen1.5-7b": "codeqwen15_7b",
+    "qwen3-32b": "qwen3_32b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "jamba-1.5-large-398b": "jamba_15_large",
+    "qwen1.5-32b": "qwen15_32b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "rwkv6-7b": "rwkv6_7b",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod_name = ALIASES.get(arch, arch.replace("-", "_").replace(".", ""))
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def all_configs():
+    return {a: get_config(a) for a in ARCH_IDS}

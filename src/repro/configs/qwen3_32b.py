@@ -1,0 +1,17 @@
+"""Qwen3-32B [hf:Qwen/Qwen3-8B family]: GQA kv=8, per-head qk-norm, no bias."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-32b",
+    family="dense",
+    num_layers=64,
+    d_model=5120,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=25600,
+    vocab_size=151936,
+    qkv_bias=False,
+    qk_norm=True,
+    rope_theta=1e6,
+)

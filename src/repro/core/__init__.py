@@ -1,0 +1,13 @@
+"""The paper's primary contribution: FeDLRT — federated dynamical low-rank
+training with variance correction, plus its baselines and cost model."""
+from repro.core.factorization import (  # noqa: F401
+    AugmentedFactor,
+    LowRankFactor,
+    init_factor,
+    is_factor,
+    lr_matmul,
+    lr_rowlookup,
+    materialize,
+)
+from repro.core.fedlrt import FedConfig, fedlrt_round, make_fedlrt_step  # noqa: F401
+from repro.core.baselines import fedavg_round, fedlin_round  # noqa: F401

@@ -1,0 +1,210 @@
+"""Baselines the paper compares against.
+
+- :func:`fedavg_round`  — Algorithm 3 (McMahan et al.).
+- :func:`fedlin_round`  — Algorithm 4 (Mitra et al.): FedAvg + variance
+  correction, an extra communication round for the global gradient.
+- :func:`fedlrt_naive_round` — Algorithm 6: per-client low-rank training
+  with *client-local* bases.  Aggregation must reconstruct the full weight
+  matrix and re-factorize it with an ``n×n`` SVD — the expensive scheme
+  FeDLRT's shared basis eliminates.  Implemented for completeness and used
+  by tests/benchmarks on small layers.
+
+All round functions share the (params, client_batches) → (params, metrics)
+contract of :func:`repro.core.fedlrt.fedlrt_round` so the engine and the
+benchmarks can swap methods freely.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cost_model
+from repro.core.dlrt import qr_pos
+from repro.core.factorization import (
+    AugmentedFactor,
+    LowRankFactor,
+    is_factor,
+    mask_coeff,
+    rank_mask,
+)
+from repro.core.fedlrt import FedConfig
+from repro.optim import make_optimizer
+from repro.utils.tree import tree_mean_leading_axis
+
+Array = jax.Array
+LossFn = Callable[[Any, Any], Array]
+
+
+def _local_sgd(loss_fn, params0, corr_c, batches, cfg: FedConfig):
+    """s* local steps of (optionally corrected) SGD — shared by both baselines."""
+    opt = make_optimizer(cfg.optimizer, cfg.lr, momentum=cfg.momentum)
+
+    def client(corr, batch):
+        state0 = opt.init(params0)
+
+        def step(carry, s):
+            p, ost = carry
+            b = batch
+            if cfg.per_step_batches:
+                b = jax.tree.map(
+                    lambda x: jax.lax.dynamic_index_in_dim(x, s, 0, keepdims=False),
+                    batch,
+                )
+            g = jax.grad(loss_fn)(p, b)
+            g = jax.tree.map(jnp.add, g, corr)
+            upd, ost = opt.update(g, ost, s)
+            new_p = jax.tree.map(lambda t, u: t + u.astype(t.dtype), p, upd)
+            return (new_p, ost), ()
+
+        (p, _), _ = jax.lax.scan(step, (params0, state0), jnp.arange(cfg.s_star))
+        return p
+
+    return jax.vmap(client, in_axes=(0, 0))(corr_c, batches)
+
+
+def fedavg_round(loss_fn: LossFn, params, client_batches, cfg: FedConfig):
+    """Algorithm 3: local SGD, aggregate by averaging."""
+    first = client_batches
+    if cfg.per_step_batches:
+        first = jax.tree.map(lambda x: x[:, 0], client_batches)
+    losses = jax.vmap(loss_fn, in_axes=(None, 0))(params, first)
+    zeros = jax.tree.map(
+        lambda t: jnp.zeros((cfg.num_clients,) + t.shape, t.dtype), params
+    )
+    params_c = _local_sgd(loss_fn, params, zeros, client_batches, cfg)
+    new_params = tree_mean_leading_axis(params_c)
+    metrics = {
+        "loss_before": jnp.mean(losses),
+        "comm_bytes_per_client": jnp.float32(
+            cost_model.dense_round_comm_bytes(params, "fedavg")
+        ),
+    }
+    if cfg.eval_after:
+        metrics["loss_after"] = jnp.mean(
+            jax.vmap(loss_fn, in_axes=(None, 0))(new_params, first)
+        )
+    return new_params, metrics
+
+
+def fedlin_round(loss_fn: LossFn, params, client_batches, cfg: FedConfig):
+    """Algorithm 4: FedAvg + variance correction (Eq. (4)).
+
+    Effective client gradient: ∇L_c(w) − ∇L_c(wᵗ) + ∇L(wᵗ).
+    """
+    first = client_batches
+    if cfg.per_step_batches:
+        first = jax.tree.map(lambda x: x[:, 0], client_batches)
+    losses, g_c = jax.vmap(jax.value_and_grad(loss_fn), in_axes=(None, 0))(
+        params, first
+    )
+    g = tree_mean_leading_axis(g_c)
+    corr_c = jax.tree.map(
+        lambda gbar, gc: jnp.broadcast_to(gbar, gc.shape) - gc, g, g_c
+    )
+    params_c = _local_sgd(loss_fn, params, corr_c, client_batches, cfg)
+    new_params = tree_mean_leading_axis(params_c)
+    metrics = {
+        "loss_before": jnp.mean(losses),
+        "comm_bytes_per_client": jnp.float32(
+            cost_model.dense_round_comm_bytes(params, "fedlin")
+        ),
+    }
+    if cfg.eval_after:
+        metrics["loss_after"] = jnp.mean(
+            jax.vmap(loss_fn, in_axes=(None, 0))(new_params, first)
+        )
+    return new_params, metrics
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 6: naive per-client low-rank (client-local bases)
+# ---------------------------------------------------------------------------
+
+
+def _naive_client_round(loss_fn, f: LowRankFactor, batch, cfg: FedConfig):
+    """One client's local basis-augment + single coefficient step (Alg. 6)."""
+
+    def as_loss(U, S, V):
+        return loss_fn(LowRankFactor(U=U, S=S, V=V, rank=f.rank), batch)
+
+    gU, gV = jax.grad(as_loss, argnums=(0, 2))(f.U, f.S, f.V)
+    r_max = f.r_max
+    m = rank_mask(f.rank, r_max, dtype=f.U.dtype)
+    U_t = qr_pos(jnp.concatenate([f.U, gU * m[None, :]], axis=1))
+    V_t = qr_pos(jnp.concatenate([f.V, gV * m[None, :]], axis=1))
+    S_t = jnp.zeros((2 * r_max, 2 * r_max), f.S.dtype).at[:r_max, :r_max].set(f.S)
+
+    def aug_loss(S):
+        return loss_fn(
+            AugmentedFactor(U=U_t, S=S, V=V_t, rank=f.rank), batch
+        )
+
+    amask = (jnp.arange(2 * r_max) < f.rank) | (
+        (jnp.arange(2 * r_max) >= r_max) & (jnp.arange(2 * r_max) < r_max + f.rank)
+    )
+    amask = amask.astype(S_t.dtype)
+    S_c = S_t
+    for _ in range(1):  # Alg. 6 does one coefficient step per round
+        gS = mask_coeff(jax.grad(aug_loss)(S_c), amask)
+        S_c = S_c - cfg.lr * gS
+    return U_t, S_c, V_t
+
+
+def fedlrt_naive_round(
+    loss_fn: Callable[[LowRankFactor, Any], Array],
+    f: LowRankFactor,
+    client_batches,
+    cfg: FedConfig,
+):
+    """Algorithm 6 on a single factorized layer (the paper's setting).
+
+    Per-client bases diverge, so the server must reconstruct
+    ``W* = mean_c Ũ_c S̃_c Ṽ_cᵀ`` and run a full ``n×n`` SVD — the cost this
+    paper's shared basis removes (Table 1 rows FeDLR / Riemannian FL).
+    """
+    U_c, S_c, V_c = jax.vmap(
+        lambda b: _naive_client_round(loss_fn, f, b, cfg)
+    )(client_batches)
+    W_star = jnp.mean(jnp.einsum("cik,ckl,cjl->cij", U_c, S_c, V_c), axis=0)
+    P, sigma, Qt = jnp.linalg.svd(W_star, full_matrices=False)
+    r_max = f.r_max
+    tail = jnp.cumsum(jnp.square(sigma[::-1]))[::-1]
+    theta = cfg.tau * jnp.linalg.norm(sigma)
+    ok = tail < jnp.square(theta)
+    r1 = jnp.clip(jnp.where(jnp.any(ok), jnp.argmax(ok), sigma.shape[0]), 1, r_max)
+    keep = rank_mask(r1.astype(jnp.float32), r_max)
+    new_f = LowRankFactor(
+        U=P[:, :r_max],
+        S=jnp.diag(sigma[:r_max] * keep),
+        V=Qt[:r_max, :].T,
+        rank=r1.astype(jnp.float32),
+    )
+    losses = jax.vmap(lambda b: loss_fn(f, b))(client_batches)
+    metrics = {
+        "loss_before": jnp.mean(losses),
+        "rank": new_f.rank,
+        # Alg. 6 communicates both augmented bases and coefficients per client
+        "comm_bytes_per_client": jnp.float32(
+            4
+            * (
+                (f.n_in + f.n_out) * 2 * f.r_max
+                + (2 * f.r_max) ** 2
+                + (f.n_in + f.n_out) * f.r_max
+                + f.r_max**2
+            )
+        ),
+    }
+    if cfg.eval_after:
+        metrics["loss_after"] = jnp.mean(
+            jax.vmap(lambda b: loss_fn(new_f, b))(client_batches)
+        )
+    return new_f, metrics
+
+
+ROUND_FNS = {
+    "fedavg": fedavg_round,
+    "fedlin": fedlin_round,
+}

@@ -1,0 +1,230 @@
+"""Low-rank factor algebra for FeDLRT.
+
+A layer weight is represented as ``W = U S Vᵀ`` with orthonormal bases
+``U ∈ R^{n_in × r_max}``, ``V ∈ R^{n_out × r_max}`` and a coefficient matrix
+``S ∈ R^{r_max × r_max}``.
+
+**Masked adaptive rank.** The paper's rank ``r`` changes every aggregation
+round (augment to 2r, truncate to r₁).  jit requires static shapes, so we
+keep *fixed* buffers of width ``r_max`` (and ``2·r_max`` for the augmented
+state) plus a dynamic scalar ``rank``.  The invariant that makes every
+operation exact under padding is:
+
+    S is zero outside its leading ``rank × rank`` block; the first ``rank``
+    columns of U/V are orthonormal and all columns beyond ``rank`` are
+    ZERO.
+
+Then ``W = U S Vᵀ`` ignores inactive columns automatically and every
+quantity below (products, gradients, projections) equals its
+dynamically-shaped counterpart.  Zero (rather than junk-orthonormal)
+inactive columns make projections like ``G − U UᵀG`` exact with the full
+buffer — no contamination from stale directions is possible.
+
+``rank`` is stored as float32 so the factor pytree stays differentiable
+(`jax.grad` rejects integer leaves); it only ever enters comparisons, which
+have zero cotangent.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@partial(jax.tree_util.register_dataclass, data_fields=["U", "S", "V", "rank"], meta_fields=[])
+@dataclasses.dataclass
+class LowRankFactor:
+    """``W = U S Vᵀ`` with masked adaptive rank (see module docstring)."""
+
+    U: Array  # (n_in, r_max)
+    S: Array  # (r_max, r_max); zero outside [:rank, :rank]
+    V: Array  # (n_out, r_max)
+    rank: Array  # f32 scalar, active rank
+
+    @property
+    def r_max(self) -> int:
+        return self.U.shape[-1]
+
+    @property
+    def n_in(self) -> int:
+        return self.U.shape[-2]
+
+    @property
+    def n_out(self) -> int:
+        return self.V.shape[-2]
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["U", "S", "V", "rank"],
+    meta_fields=[],
+)
+@dataclasses.dataclass
+class AugmentedFactor:
+    """Augmented state between basis augmentation and truncation.
+
+    ``U, V ∈ R^{n × 2·r_max}``, ``S ∈ R^{2·r_max × 2·r_max}``.  The *active*
+    augmented directions are indices ``[0, r) ∪ [r_max, r_max + r)`` where
+    ``r`` is the pre-augmentation rank: original basis columns followed by
+    the orthonormalized basis-gradient columns (rank r → 2r, paper Eq. (6)).
+    """
+
+    U: Array
+    S: Array
+    V: Array
+    rank: Array  # pre-augmentation rank
+
+    @property
+    def r_max(self) -> int:
+        return self.U.shape[-1] // 2
+
+
+def rank_mask(rank: Array, width: int, dtype=jnp.float32) -> Array:
+    """``m[..., i] = 1.0 if i < rank else 0.0``; batched over ``rank``'s shape.
+
+    ``rank`` may be a scalar (single factor) or shaped ``(...,)`` for
+    stacked-layer factors (per-layer adaptive ranks inside a lax.scan stack).
+    """
+    rank = jnp.asarray(rank)
+    return (jnp.arange(width) < rank[..., None]).astype(dtype)
+
+
+def augmented_mask(rank: Array, r_max: int, dtype=jnp.float32) -> Array:
+    """Active-direction mask of the augmented basis, last dim ``2·r_max``.
+
+    Active = first ``rank`` original columns plus the first ``rank``
+    gradient columns (which QR places at offset ``r_max``).  Batched over
+    ``rank``'s shape like :func:`rank_mask`.
+    """
+    rank = jnp.asarray(rank)
+    i = jnp.arange(2 * r_max)
+    r = rank[..., None]
+    active = (i < r) | ((i >= r_max) & (i < r_max + r))
+    return active.astype(dtype)
+
+
+def mask_coeff(S: Array, mask: Array) -> Array:
+    """Zero S outside the active block: ``m ⊙ S ⊙ mᵀ`` (batched over ...)."""
+    return S * mask[..., :, None] * mask[..., None, :]
+
+
+def materialize(f: LowRankFactor | AugmentedFactor) -> Array:
+    """Reconstruct the full ``n_in × n_out`` matrix (tests / tiny layers only)."""
+    return jnp.einsum("...ir,...rs,...js->...ij", f.U, f.S, f.V)
+
+
+def lr_matmul(x: Array, f: LowRankFactor | AugmentedFactor, *, precision=None) -> Array:
+    """``y = x @ (U S Vᵀ)`` evaluated through the rank bottleneck.
+
+    Cost ``O(b·n·r)`` instead of ``O(b·n²)``; the full matrix is never
+    formed.  This is the client-side compute saving of the paper
+    (Table 1) and the contraction our Pallas kernel fuses on TPU.
+    """
+    h = jnp.matmul(x, f.U, precision=precision)
+    h = jnp.matmul(h, f.S.astype(h.dtype), precision=precision)
+    return jnp.matmul(h, f.V.T.astype(h.dtype), precision=precision)
+
+
+def lr_rowlookup(idx: Array, f: LowRankFactor, *, out_dtype=None) -> Array:
+    """Row lookup ``W[idx, :]`` for factorized embedding tables.
+
+    ``gather`` of the ``r``-wide row of U followed by two small matmuls;
+    never materializes the ``vocab × d`` table.
+    """
+    u = jnp.take(f.U, idx, axis=0)  # (..., r_max)
+    out = (u @ f.S) @ f.V.T
+    return out.astype(out_dtype) if out_dtype is not None else out
+
+
+def is_factor(x) -> bool:
+    return isinstance(x, (LowRankFactor, AugmentedFactor))
+
+
+def orthonormal_init(
+    key: Array, n: int, r: int, dtype=jnp.float32, batch_shape: tuple = ()
+) -> Array:
+    """Random orthonormal ``n × r`` basis (batched) via QR of a Gaussian."""
+    a = jax.random.normal(key, batch_shape + (n, r), dtype=jnp.float32)
+    q, _ = jnp.linalg.qr(a)
+    return q.astype(dtype)
+
+
+def init_factor(
+    key: Array,
+    n_in: int,
+    n_out: int,
+    r_max: int,
+    *,
+    init_rank: Optional[int] = None,
+    spectrum_scale: Optional[float] = None,
+    dtype=jnp.float32,
+    batch_shape: tuple = (),
+) -> LowRankFactor:
+    """Initialize ``U¹, V¹`` orthonormal and ``S¹`` full-rank diagonal.
+
+    The singular spectrum is set so that ``W = U S Vᵀ`` has He-like scale:
+    ``E‖W x‖² ≈ (2/n_in)·‖x‖²`` concentrated on ``init_rank`` directions,
+    matching dense init magnitude for stable training at round 0.
+    """
+    # The augmented basis [U | G] must fit min(n_in, n_out) orthonormal
+    # columns, so the rank buffer is capped at half the smaller dimension.
+    r_cap = max(min(n_in, n_out) // 2, 1)
+    r_max = min(r_max, r_cap)
+    if init_rank is None:
+        init_rank = r_max
+    init_rank = min(init_rank, r_max)
+    ku, kv = jax.random.split(key)
+    U = orthonormal_init(ku, n_in, r_max, dtype, batch_shape)
+    V = orthonormal_init(kv, n_out, r_max, dtype, batch_shape)
+    if spectrum_scale is None:
+        # Match Frobenius norm of He-init dense matrix: ||W||_F² = 2·n_out.
+        spectrum_scale = (2.0 * n_out / max(init_rank, 1)) ** 0.5  # python math: eval_shape-safe
+    sigma = spectrum_scale * jnp.exp(
+        -jnp.arange(r_max, dtype=jnp.float32) / max(init_rank, 1)
+    )
+    m = rank_mask(jnp.float32(init_rank), r_max)
+    sigma = sigma * m
+    S = jnp.broadcast_to(jnp.diag(sigma), batch_shape + (r_max, r_max)).astype(dtype)
+    rank = jnp.broadcast_to(jnp.float32(init_rank), batch_shape)
+    # zero-columns invariant: inactive basis columns are exactly zero
+    return LowRankFactor(U=U * m, S=S, V=V * m, rank=rank)
+
+
+def factor_param_count(f: LowRankFactor) -> int:
+    """Static parameter count of the communicated/stored factors."""
+    return f.U.size + f.S.size + f.V.size
+
+
+def effective_rank(f: LowRankFactor) -> Array:
+    return f.rank
+
+
+def check_invariants(f: LowRankFactor, *, atol: float = 1e-4) -> dict:
+    """Diagnostics (tests): active-block orthonormality, zero inactive
+    columns, S-mask violation.  Batched factors report the max over batch.
+    """
+    mT = lambda a: jnp.swapaxes(a, -1, -2)
+    m = rank_mask(f.rank, f.r_max)
+
+    def defect(B):
+        B = B.astype(jnp.float32)
+        gram = mT(B) @ B
+        # active block must be the identity; inactive columns must be zero
+        want = jnp.eye(f.r_max) * m[..., None, :] * m[..., :, None]
+        active_err = jnp.linalg.norm(
+            (gram - want) * m[..., None, :] * m[..., :, None], axis=(-2, -1)
+        )
+        inactive_err = jnp.linalg.norm(B * (1 - m)[..., None, :], axis=(-2, -1))
+        return jnp.max(active_err + inactive_err)
+
+    s_violation = jnp.linalg.norm(f.S - mask_coeff(f.S, m), axis=(-2, -1))
+    return {
+        "u_ortho_defect": defect(f.U),
+        "v_ortho_defect": defect(f.V),
+        "s_mask_violation": jnp.max(s_violation),
+    }

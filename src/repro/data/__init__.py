@@ -1,0 +1,9 @@
+from repro.data.synthetic import (  # noqa: F401
+    LeastSquaresProblem,
+    make_classification_data,
+    make_heterogeneous_lsq,
+    make_homogeneous_lsq,
+    make_token_stream,
+)
+from repro.data.partition import partition_dirichlet, partition_iid  # noqa: F401
+from repro.data.pipeline import FederatedBatcher  # noqa: F401

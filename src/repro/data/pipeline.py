@@ -1,0 +1,78 @@
+"""Batching pipeline for federated rounds.
+
+Produces per-round batch pytrees with the ``(C, ...)`` or ``(C, s*, b, ...)``
+client-leading layout that :func:`repro.core.fedlrt.fedlrt_round` consumes.
+Deterministic, restartable (state = round index), no host-side dependency
+beyond numpy.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+
+class FederatedBatcher:
+    """Cycles through each client's shard in shuffled epochs.
+
+    Parameters
+    ----------
+    arrays: dict of data arrays, first axis = sample.
+    partitions: list (len C) of index arrays into the sample axis.
+    batch_size: per-client per-step batch.
+    steps_per_round: s* (yields ``(C, s*, b, ...)``) or None (``(C, b, ...)``
+        with one batch per round reused for every local step).
+    """
+
+    def __init__(
+        self,
+        arrays: Dict[str, np.ndarray],
+        partitions: Sequence[np.ndarray],
+        *,
+        batch_size: int,
+        steps_per_round: int | None = None,
+        seed: int = 0,
+    ):
+        self.arrays = arrays
+        self.partitions = [np.asarray(p) for p in partitions]
+        self.batch_size = batch_size
+        self.steps_per_round = steps_per_round
+        self.rng = np.random.default_rng(seed)
+        self._cursors = [0] * len(partitions)
+        self._orders: List[np.ndarray] = [
+            self.rng.permutation(p) for p in self.partitions
+        ]
+
+    @property
+    def num_clients(self) -> int:
+        return len(self.partitions)
+
+    def _take(self, c: int, k: int) -> np.ndarray:
+        idx = np.empty(k, dtype=np.int64)
+        got = 0
+        while got < k:
+            avail = len(self._orders[c]) - self._cursors[c]
+            take = min(avail, k - got)
+            idx[got : got + take] = self._orders[c][
+                self._cursors[c] : self._cursors[c] + take
+            ]
+            got += take
+            self._cursors[c] += take
+            if self._cursors[c] >= len(self._orders[c]):
+                self._orders[c] = self.rng.permutation(self.partitions[c])
+                self._cursors[c] = 0
+        return idx
+
+    def next_round(self) -> Dict[str, np.ndarray]:
+        C, b, s = self.num_clients, self.batch_size, self.steps_per_round
+        k = b * (s or 1)
+        idx = np.stack([self._take(c, k) for c in range(C)])  # (C, k)
+        out = {}
+        for name, arr in self.arrays.items():
+            g = arr[idx.reshape(-1)].reshape((C, k) + arr.shape[1:])
+            if s is not None:
+                g = g.reshape((C, s, b) + arr.shape[1:])
+            else:
+                g = g.reshape((C, b) + arr.shape[1:])
+            out[name] = g
+        return out

@@ -1,0 +1,1 @@
+from repro.fed.engine import FederatedEngine, RoundResult  # noqa: F401

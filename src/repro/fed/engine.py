@@ -1,0 +1,137 @@
+"""Federated training engine: multi-round driver over any round function.
+
+Wires together a model loss, a data pipeline (:class:`FederatedBatcher`),
+a round method (FeDLRT / FedAvg / FedLin) and optional checkpointing into a
+restartable driver.  The round function itself stays pure/jitted; the engine
+owns the host-side loop, metric history, and eval.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FedConfig, fedlrt_round
+from repro.core.baselines import fedavg_round, fedlin_round
+
+ROUND_METHODS = {
+    "fedlrt": fedlrt_round,
+    "fedavg": fedavg_round,
+    "fedlin": fedlin_round,
+}
+
+
+@dataclasses.dataclass
+class RoundResult:
+    round_idx: int
+    loss_before: float
+    loss_after: Optional[float]
+    comm_bytes_per_client: float
+    ranks: Dict[str, np.ndarray]
+    seconds: float
+
+
+class FederatedEngine:
+    def __init__(
+        self,
+        loss_fn: Callable,
+        params,
+        cfg: FedConfig,
+        *,
+        method: str = "fedlrt",
+        eval_fn: Optional[Callable] = None,
+        checkpoint_dir: Optional[str] = None,
+        checkpoint_every: int = 0,
+        donate: bool = True,
+        client_weights=None,
+    ):
+        if method not in ROUND_METHODS:
+            raise ValueError(f"method must be one of {list(ROUND_METHODS)}")
+        self.cfg = cfg
+        self.method = method
+        self.params = params
+        self.eval_fn = eval_fn
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = checkpoint_every
+        self.history: List[RoundResult] = []
+        self.round_idx = 0
+        round_fn = ROUND_METHODS[method]
+
+        if method == "fedlrt":
+            def step(p, b, r):
+                return round_fn(
+                    loss_fn, p, b, cfg, round_idx=r,
+                    client_weights=client_weights,
+                )
+        else:
+            def step(p, b, r):
+                return round_fn(loss_fn, p, b, cfg)
+
+        self._step = jax.jit(step, donate_argnums=(0,) if donate else ())
+
+    def run_round(self, client_batches) -> RoundResult:
+        t0 = time.time()
+        self.params, metrics = self._step(
+            self.params, client_batches, jnp.int32(self.round_idx)
+        )
+        metrics = jax.device_get(metrics)
+        res = RoundResult(
+            round_idx=self.round_idx,
+            loss_before=float(metrics["loss_before"]),
+            loss_after=(
+                float(metrics["loss_after"]) if "loss_after" in metrics else None
+            ),
+            comm_bytes_per_client=float(metrics.get("comm_bytes_per_client", 0.0)),
+            ranks={
+                k: np.asarray(v) for k, v in metrics.get("rank", {}).items()
+            },
+            seconds=time.time() - t0,
+        )
+        self.history.append(res)
+        self.round_idx += 1
+        if (
+            self.checkpoint_dir
+            and self.checkpoint_every
+            and self.round_idx % self.checkpoint_every == 0
+        ):
+            from repro.checkpoint import save_checkpoint
+
+            save_checkpoint(
+                f"{self.checkpoint_dir}/round_{self.round_idx:06d}.npz",
+                self.params,
+                meta={"round": self.round_idx, "method": self.method},
+            )
+        return res
+
+    def train(self, batcher, num_rounds: int, *, log_every: int = 10, to_device=None):
+        for _ in range(num_rounds):
+            batch = batcher.next_round()
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            res = self.run_round(batch)
+            if log_every and res.round_idx % log_every == 0:
+                extra = ""
+                if res.ranks:
+                    mean_rank = np.mean([np.mean(v) for v in res.ranks.values()])
+                    extra = f" mean_rank={mean_rank:.1f}"
+                print(
+                    f"[{self.method}] round {res.round_idx:4d} "
+                    f"loss {res.loss_before:.4f}"
+                    + (f" → {res.loss_after:.4f}" if res.loss_after is not None else "")
+                    + f" comm {res.comm_bytes_per_client/1e6:.2f} MB/client"
+                    + extra
+                )
+        return self.history
+
+    def evaluate(self, batch) -> float:
+        assert self.eval_fn is not None
+        return float(self.eval_fn(self.params, batch))
+
+    def comm_total_bytes(self) -> float:
+        return float(
+            sum(r.comm_bytes_per_client for r in self.history)
+            * self.cfg.num_clients
+        )

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for FeDLRT's compute hot spots.
+
+- lowrank_matmul.py: fused ``(x U) S`` and ``A Vᵀ`` (forward chain)
+- coeff_grad.py: ``Aᵀ B`` accumulation (coefficient gradient projection)
+- ops.py: jit wrappers + custom VJP; ref.py: pure-jnp oracles
+
+Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
+validated on CPU in interpret mode against ref.py.
+"""
+from repro.kernels.ops import coeff_grad_kernels, lowrank_apply, lowrank_apply_kernels  # noqa: F401

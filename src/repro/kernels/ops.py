@@ -1,0 +1,147 @@
+"""jit-ready wrappers around the Pallas kernels with a custom VJP.
+
+``lowrank_apply(x, U, S, V)`` computes the forward chain with the fused
+kernels and wires the backward pass through the same primitives:
+
+    A  = (x U) S                     [xus kernel]
+    y  = A Vᵀ                        [avt kernel]
+    dA = dy V                        [avt-with-swap ≡ matmul vs V]
+    dx = (dA Sᵀ) Uᵀ                  [xus(dy·V, Sᵀ)→ then avt vs U]
+    dU = xᵀ (dy V Sᵀ)                [atb kernel]
+    dS = (x U)ᵀ (dy V)               [atb kernel — the Ũᵀ(·)Ṽ projection]
+    dV = dyᵀ (x U S)                 [atb kernel]
+
+On non-TPU backends (this container) the wrappers fall back to the jnp
+reference implementation unless ``interpret=True`` is forced — Pallas TPU
+kernels only *compile* for TPU; interpret mode executes the kernel body in
+Python for correctness validation (used by tests/benchmarks here).
+
+Rank padding: callers may pass any r ≥ 1; inputs are zero-padded to a
+multiple of 128 lanes (exact — padded columns are zero).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.coeff_grad import atb
+from repro.kernels.lowrank_matmul import avt, xus
+
+LANE = 128
+
+
+def _pad_rank(U, S, V):
+    R = U.shape[1]
+    Rp = -(-R // LANE) * LANE
+    if Rp == R:
+        return U, S, V
+    pu = ((0, 0), (0, Rp - R))
+    return (
+        jnp.pad(U, pu),
+        jnp.pad(S, ((0, Rp - R), (0, Rp - R))),
+        jnp.pad(V, pu),
+    )
+
+
+def _pad_rows(x, mult):
+    M = x.shape[0]
+    Mp = -(-M // mult) * mult
+    return (jnp.pad(x, ((0, Mp - M), (0, 0))), M) if Mp != M else (x, M)
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pick(block, size):
+    b = min(block, size)
+    while size % b:
+        b //= 2
+    return max(b, 1)
+
+
+def lowrank_apply_kernels(x, U, S, V, *, interpret: bool) -> jax.Array:
+    """Forward chain through the Pallas kernels (padded + tiled)."""
+    U, S, V = _pad_rank(U, S, V)
+    x2, M = _pad_rows(x, 8)
+    bm = _pick(256, x2.shape[0])
+    bk = _pick(512, x2.shape[1])
+    A = xus(x2, U, S, bm=bm, bk=bk, interpret=interpret)
+    bn = _pick(256, V.shape[0])
+    y = avt(A, V, bm=bm, bn=bn, interpret=interpret)
+    return y[:M]
+
+
+def coeff_grad_kernels(x, dy, U, V, *, interpret: bool) -> jax.Array:
+    """∇_S L = (x U)ᵀ (dy V) via the atb kernel (paper's client backward)."""
+    R = U.shape[1]
+    U2, _, V2 = _pad_rank(U, jnp.zeros((R, R), U.dtype), V)
+    x2, M = _pad_rows(x, 8)
+    dy2, _ = _pad_rows(dy, 8)
+    eye = jnp.eye(U2.shape[1], dtype=jnp.float32)
+    bm = _pick(256, x2.shape[0])
+    A = xus(x2, U2, eye, bm=bm, bk=_pick(512, x2.shape[1]), interpret=interpret)
+    B = xus(dy2, V2, eye, bm=bm, bk=_pick(512, dy2.shape[1]), interpret=interpret)
+    C = atb(A, B, bm=_pick(512, A.shape[0]), bka=_pick(256, A.shape[1]),
+            interpret=interpret)
+    return C[:R, :R]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def lowrank_apply(x, U, S, V, use_kernels: bool = False):
+    """y = ((x U) S) Vᵀ with a kernel-backed custom VJP.
+
+    ``use_kernels``: run the Pallas path (TPU, or interpret on CPU);
+    False → pure-jnp reference (XLA fuses well on its own for small sizes).
+    """
+    if use_kernels:
+        interpret = not on_tpu()
+        return lowrank_apply_kernels(x, U, S, V, interpret=interpret)
+    return ref.lowrank_matmul_ref(x, U, S, V)
+
+
+def _fwd(x, U, S, V, use_kernels):
+    y = lowrank_apply(x, U, S, V, use_kernels)
+    return y, (x, U, S, V)
+
+
+def _bwd(use_kernels, resids, dy):
+    x, U, S, V = resids
+    interpret = not on_tpu()
+
+    if use_kernels:
+        U_, S_, V_ = _pad_rank(U, S, V)
+        dy2, M = _pad_rows(dy, 8)
+        x2, _ = _pad_rows(x, 8)
+        eye = jnp.eye(U_.shape[1], dtype=jnp.float32)
+        bm = _pick(256, dy2.shape[0])
+        dyV = xus(dy2, V_, eye, bm=bm, bk=_pick(512, dy2.shape[1]), interpret=interpret)
+        xU = xus(x2, U_, eye, bm=bm, bk=_pick(512, x2.shape[1]), interpret=interpret)
+        dA = xus(dy2, V_, jnp.transpose(S_).astype(jnp.float32), bm=bm,
+                 bk=_pick(512, dy2.shape[1]), interpret=interpret)  # dy V Sᵀ
+        dx = avt(dA, U_, bm=bm, bn=_pick(256, U_.shape[0]), interpret=interpret)
+        dU = atb(x2, dA, bm=_pick(512, x2.shape[0]), bka=_pick(256, x2.shape[1]),
+                 interpret=interpret)
+        dS = atb(xU, dyV, bm=_pick(512, xU.shape[0]),
+                 bka=_pick(256, xU.shape[1]), interpret=interpret)
+        xUS = xus(x2, U_, S_.astype(jnp.float32), bm=bm,
+                  bk=_pick(512, x2.shape[1]), interpret=interpret)
+        dV = atb(dy2, xUS, bm=_pick(512, dy2.shape[0]),
+                 bka=_pick(256, dy2.shape[1]), interpret=interpret)
+        R = U.shape[1]
+        return (dx[: x.shape[0]], dU[:, :R], dS[:R, :R], dV[:, :R])
+
+    dyV = dy @ V
+    xU = x @ U
+    dx = (dyV @ S.T) @ U.T
+    dU = x.T @ (dyV @ S.T)
+    dS = xU.T @ dyV
+    dV = dy.T @ (xU @ S)
+    return (dx, dU, dS, dV)
+
+
+lowrank_apply.defvjp(_fwd, _bwd)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def xus_ref(x: jax.Array, U: jax.Array, S: jax.Array) -> jax.Array:
+    """A = (x @ U) @ S.  x: (M, K), U: (K, R), S: (R, R) → (M, R)."""
+    return (x @ U) @ S.astype(x.dtype)
+
+
+def avt_ref(A: jax.Array, V: jax.Array) -> jax.Array:
+    """y = A @ Vᵀ.  A: (M, R), V: (N, R) → (M, N)."""
+    return A @ V.T
+
+
+def lowrank_matmul_ref(x, U, S, V):
+    """y = ((x U) S) Vᵀ — the paper's client-side bottleneck chain."""
+    return avt_ref(xus_ref(x, U, S), V)
+
+
+def mha_ref(q, k, v, *, q_positions, kv_positions, causal=True, sliding_window=0):
+    """Materialized-scores attention oracle (GQA via head repeat)."""
+    B, Tq, H, d = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    kr = jnp.repeat(k, g, axis=2)
+    vr = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum("bqhd,bthd->bhqt", q, kr) / jnp.sqrt(jnp.float32(d))
+    m = (kv_positions[None, :] >= 0) & (q_positions[:, None] >= 0)
+    if causal:
+        m &= kv_positions[None, :] <= q_positions[:, None]
+    if sliding_window:
+        m &= kv_positions[None, :] > q_positions[:, None] - sliding_window
+    s = jnp.where(m[None, None], s.astype(jnp.float32), -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqt,bthd->bqhd", p, vr)
+
+
+def atb_ref(A: jax.Array, B: jax.Array) -> jax.Array:
+    """C = Aᵀ @ B (f32 accumulation).  A: (M, Ka), B: (M, Kb) → (Ka, Kb).
+
+    With A = x@Ũ and B = dy@Ṽ this is the coefficient gradient
+    ∇_S̃ L = Ũᵀ (xᵀ dy) Ṽ — the hot op of the client loop's backward."""
+    return (A.astype(jnp.float32).T @ B.astype(jnp.float32)).astype(A.dtype)

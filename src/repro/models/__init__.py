@@ -1,0 +1,9 @@
+from repro.models.config import (  # noqa: F401
+    EncoderConfig,
+    LowRankPolicy,
+    MambaConfig,
+    ModelConfig,
+    MoEConfig,
+    RWKVConfig,
+)
+from repro.models.model import Model, build_model  # noqa: F401

@@ -1,0 +1,230 @@
+"""Top-level model: init / train-loss / serve — uniform over all families.
+
+``build_model(cfg)`` returns a :class:`Model` with
+- ``init(key) → (params, specs)``: params pytree mixing LowRankFactor and
+  dense leaves + matching PartitionSpec pytree,
+- ``loss_fn(params, batch) → scalar``: next-token cross-entropy (+ MoE aux),
+  the function handed to ``fedlrt_round`` / baselines,
+- ``serve_prefill(params, batch) → (logits, cache)`` and
+  ``serve_step(params, cache, tokens) → (logits, cache)``: KV-cached decode.
+
+Batch layouts by family (leaves may carry extra leading client axes):
+  dense/moe/ssm/hybrid: {"tokens": (B, T+1) i32}
+  vlm:   + {"vision_embeds": (B, n_vis, d) f32}  (stub frontend output)
+  audio: {"frames": (B, n_frames, d) f32, "tokens": (B, T+1) i32}
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import sharding
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    Builder,
+    apply_embedding,
+    apply_linear,
+    rms_norm,
+    sinusoidal_positions,
+)
+from repro.models.transformer import (
+    build_block,
+    init_cache_stack,
+    stack_apply,
+)
+
+Array = jax.Array
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+
+
+def build_params(cfg: ModelConfig, key: Array):
+    pol = cfg.lowrank
+    pdt = jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+    b = Builder(key, pol, dtype=pdt)
+    NB = cfg.superblocks
+
+    # embeddings / head.  embed stays replicated (gather must be local);
+    # lm_head V is vocab-sharded (logits computed shard-local, CE reduces).
+    b.linear(
+        "embed", cfg.vocab_size, cfg.d_model, li=None, lo="embed",
+        force_dense=not pol.factorize_embed,
+    )
+    b.linear(
+        "lm_head", cfg.d_model, cfg.vocab_size, li="embed", lo="vocab",
+        force_dense=not pol.factorize_head,
+    )
+    b.vector("final_norm", (cfg.d_model,))
+
+    for i, kind in enumerate(cfg.block_pattern):
+        moe_here = cfg.moe is not None and (
+            i % cfg.moe.every_k_layers == cfg.moe.offset
+        )
+        build_block(
+            b, f"blocks/pos{i}", kind, cfg, NB,
+            moe_here=moe_here, cross=cfg.is_encdec,
+        )
+
+    if cfg.is_encdec:
+        enc = cfg.encoder
+        for i in range(1):  # encoder superblock pattern is ("attn",)
+            build_block(
+                b, f"enc_blocks/pos{i}", "attn", cfg, enc.num_layers,
+                moe_here=False, cross=False,
+            )
+        b.vector("enc_norm", (cfg.d_model,))
+
+    return b.build()
+
+
+def _encode(params, frames: Array, cfg: ModelConfig) -> Array:
+    """Whisper-style encoder over stub frame embeddings (bidirectional)."""
+    dt = _dtype(cfg)
+    h = frames.astype(dt)
+    h = h + sinusoidal_positions(h.shape[1], cfg.d_model, dt)[None]
+    pos = jnp.arange(h.shape[1])
+    h, _, _ = stack_apply(
+        params["enc_blocks"], h, cfg, positions=pos, caches=None,
+        causal=False, use_rope=False, pattern=("attn",),
+    )
+    return rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def _logits(params, h: Array) -> Array:
+    logits = apply_linear(params["lm_head"], h)
+    # sequence-sharded logits: CE is elementwise over (B, T), so the whole
+    # loss pipeline stays seq-parallel; vocab stays local to the shard.
+    return sharding.shard(logits, "batch", "seq", None)
+
+
+def _xent(logits: Array, labels: Array, mask: Optional[Array] = None) -> Array:
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / (jnp.sum(mask) + 1e-6)
+    return jnp.mean(nll)
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable[[Array], Tuple[Any, Any]]
+    loss_fn: Callable[[Any, Any], Array]
+    serve_prefill: Callable[[Any, Any], Tuple[Array, Any]]
+    serve_step: Callable[[Any, Any, Array], Tuple[Array, Any]]
+    init_cache: Callable[[Any, int, int], Any]
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    dt = _dtype(cfg)
+
+    # ----------------------------------------------------------- training
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        inputs, labels = tokens[:, :-1], tokens[:, 1:]
+        # NOTE: the embedding output is deliberately NOT seq-sharded — the
+        # backward of a gather with updates sharded over both the data and
+        # the model axis trips an XLA SPMD-partitioner CHECK (scatter group
+        # mismatch).  The first superblock constraint reshards to seq.
+        # Lookup directly in compute dtype: the f32 intermediate was
+        # all-gathered (1.75 GiB/device on qwen2 train) before the cast.
+        emb = apply_embedding(params["embed"], inputs, dtype=dt)
+        emb = sharding.shard(emb, "batch", None, None)
+
+        cross_kv = None
+        n_prefix = 0
+        if cfg.family == "vlm" and "vision_embeds" in batch:
+            vis = batch["vision_embeds"].astype(dt)
+            emb = jnp.concatenate([vis, emb], axis=1)
+            n_prefix = vis.shape[1]
+        if cfg.is_encdec:
+            cross_kv = _encode(params, batch["frames"], cfg)
+            emb = emb + sinusoidal_positions(emb.shape[1], cfg.d_model, dt)[None]
+
+        positions = jnp.arange(emb.shape[1])
+        h, _, aux = _trunk_simple(params, emb, positions, cross_kv)
+        h = h[:, n_prefix:]
+        logits = _logits(params, h)
+        return _xent(logits, labels) + aux.astype(jnp.float32)
+
+    def _trunk_simple(params, h, positions, cross_kv):
+        use_rope = not cfg.is_encdec
+        h, caches, aux = stack_apply(
+            params["blocks"], h, cfg, positions=positions, caches=None,
+            causal=True, cross_kv=cross_kv, use_rope=use_rope,
+        )
+        return rms_norm(h, params["final_norm"], cfg.norm_eps), caches, aux
+
+    # ------------------------------------------------------------ serving
+    def init_cache(params, batch: int, cache_len: int):
+        cache = {
+            "stack": init_cache_stack(cfg, batch, cache_len, dt),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+        if cfg.is_encdec:
+            cache["enc_h"] = jnp.zeros(
+                (batch, cfg.encoder.num_frames, cfg.d_model), dt
+            )
+        return cache
+
+    def serve_prefill(params, batch, cache_len: int = 0):
+        """Process the full prompt; returns (last-token logits, cache)."""
+        tokens = batch["tokens"]  # (B, S)
+        B, S = tokens.shape
+        emb = apply_embedding(params["embed"], tokens, dtype=jnp.float32).astype(dt)
+        if cfg.family == "vlm" and "vision_embeds" in batch:
+            vis = batch["vision_embeds"].astype(dt)
+            emb = jnp.concatenate([vis, emb], axis=1)
+        cross_kv = None
+        cache = init_cache(params, B, cache_len or emb.shape[1])
+        if cfg.is_encdec:
+            cross_kv = _encode(params, batch["frames"], cfg)
+            cache["enc_h"] = cross_kv
+            emb = emb + sinusoidal_positions(emb.shape[1], cfg.d_model, dt)[None]
+        positions = jnp.arange(emb.shape[1])
+        h, new_stack, _ = stack_apply(
+            params["blocks"], emb, cfg, positions=positions,
+            caches=cache["stack"], causal=True, cross_kv=cross_kv,
+            use_rope=not cfg.is_encdec,
+        )
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        cache["stack"] = new_stack
+        cache["pos"] = jnp.int32(emb.shape[1])
+        logits = _logits(params, h[:, -1:])[:, 0]
+        return logits, cache
+
+    def serve_step(params, cache, tokens):
+        """One decode step.  tokens: (B, 1) → (logits (B, vocab), cache)."""
+        B = tokens.shape[0]
+        emb = apply_embedding(params["embed"], tokens, dtype=jnp.float32).astype(dt)
+        pos = cache["pos"]
+        positions = pos[None] + jnp.arange(tokens.shape[1])
+        cross_kv = cache.get("enc_h") if cfg.is_encdec else None
+        if cfg.is_encdec:
+            pe = sinusoidal_positions(8192, cfg.d_model, dt)
+            emb = emb + jax.lax.dynamic_slice_in_dim(pe, pos, 1, 0)[None]
+        h, new_stack, _ = stack_apply(
+            params["blocks"], emb, cfg, positions=positions,
+            caches=cache["stack"], causal=True, cross_kv=cross_kv,
+            use_rope=not cfg.is_encdec,
+        )
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        new_cache = dict(cache, stack=new_stack, pos=pos + tokens.shape[1])
+        logits = _logits(params, h[:, -1:])[:, 0]
+        return logits, new_cache
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: build_params(cfg, key),
+        loss_fn=loss_fn,
+        serve_prefill=serve_prefill,
+        serve_step=serve_step,
+        init_cache=init_cache,
+    )

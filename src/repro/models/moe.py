@@ -1,0 +1,145 @@
+"""Mixture-of-Experts block with capacity-based routing and low-rank experts.
+
+Routing is the standard TPU-friendly sort-based dispatch (no giant one-hot
+dispatch tensors): per expert, tokens that selected it are ranked by
+position and the first ``capacity`` are gathered into an ``(E, cap, d)``
+batch.  Expert weights are *stacked factorized* matrices ``U:(E,d,r)``
+sharded over the ``experts``→``model`` mesh axis (expert parallelism); the
+scatter-combine reduces across the expert axis, which GSPMD lowers to the
+expert-parallel all-reduce/all-to-all family of collectives.
+
+FeDLRT applies per expert: every expert's ``(U_e, S_e, V_e)`` follows the
+shared-basis augmentation/truncation like any other factor leaf (the stacked
+leading axis is just a batch dim to the batched QR/SVD of core.dlrt) — i.e.
+each expert learns its own adaptive rank, and only ``O(E·d·r)`` is ever
+communicated instead of ``O(E·d·d_ff)``: the paper's saving is largest
+exactly here, as MoE weights dominate the parameter count.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.factorization import is_factor
+from repro.models import sharding
+from repro.models.config import ModelConfig, MoEConfig
+from repro.models.layers import Builder
+
+Array = jax.Array
+
+
+def build_moe(b: Builder, prefix: str, cfg: ModelConfig, n_blocks: int):
+    """Register MoE params for a scanned stack of ``n_blocks`` layers."""
+    m = cfg.moe
+    d = cfg.d_model
+    bs, ba = (n_blocks, m.num_experts), ("layers", "experts")
+    b.linear(f"{prefix}/router", d, m.num_experts, batch_shape=(n_blocks,),
+             batch_axes=("layers",), force_dense=True, init_scale=0.02)
+    # expert-parallel only: the expert dim carries the "model" axis, so the
+    # per-expert feature dims must stay unsharded (a mesh axis can appear
+    # once per spec)
+    b.linear(f"{prefix}/up", d, m.d_expert, li=None, lo=None,
+             batch_shape=bs, batch_axes=ba)
+    b.linear(f"{prefix}/gate", d, m.d_expert, li=None, lo=None,
+             batch_shape=bs, batch_axes=ba)
+    b.linear(f"{prefix}/down", m.d_expert, d, li=None, lo=None,
+             batch_shape=bs, batch_axes=ba)
+    if m.num_shared_experts:
+        ds = m.d_shared or m.d_expert * m.num_shared_experts
+        b.linear(f"{prefix}/shared_up", d, ds, li="embed", lo="ffn",
+                 batch_shape=(n_blocks,), batch_axes=("layers",))
+        b.linear(f"{prefix}/shared_gate", d, ds, li="embed", lo="ffn",
+                 batch_shape=(n_blocks,), batch_axes=("layers",))
+        b.linear(f"{prefix}/shared_down", ds, d, li="ffn", lo="embed",
+                 batch_shape=(n_blocks,), batch_axes=("layers",))
+
+
+def _stacked_linear(w, x: Array) -> Array:
+    """x: (E, cap, n_in) through stacked (E, n_in, n_out) dense or factor."""
+    if is_factor(w):
+        h = jnp.einsum("ecd,edr->ecr", x, w.U.astype(x.dtype))
+        h = jnp.einsum("ecr,ers->ecs", h, w.S.astype(x.dtype))
+        return jnp.einsum("ecs,efs->ecf", h, w.V.astype(x.dtype))
+    return jnp.einsum("ecd,edf->ecf", x, w.astype(x.dtype))
+
+
+def _dense_linear(w, x: Array) -> Array:
+    if is_factor(w):
+        h = (x @ w.U.astype(x.dtype)) @ w.S.astype(x.dtype)
+        return h @ w.V.T.astype(x.dtype)
+    return x @ w.astype(x.dtype)
+
+
+def moe_block(p: dict, x: Array, cfg: ModelConfig) -> Tuple[Array, Array]:
+    """Apply one MoE FFN. x: (B, T, d) → (y, aux_loss).
+
+    **Grouped (per-row) routing**: each batch row routes its own T tokens
+    with capacity ``1.25·k·T/E``.  Dispatch gathers and the combine
+    scatter then act along the row-local T axis — no collective crosses
+    the data (batch/client) axis.  Global-competition routing (one
+    capacity pool over B·T tokens) lowered its dispatch gather to a
+    (E, cap, d) select+all-reduce across the data axis — 5 GiB/device on
+    the 1M-token prefill (perf iteration M1, EXPERIMENTS.md §Perf).
+    Expert weights stay model-sharded (expert parallelism): the dispatched
+    (B, E, cap, d) batch is sharded over batch×experts, so expert compute
+    is two-axis parallel with no resharding.
+    """
+    m = cfg.moe
+    B, T, d = x.shape
+    N = B * T
+    xf = x.reshape(N, d)
+    E, k = m.num_experts, m.top_k
+    cap = max(int(m.capacity_factor * k * N / E), 1)
+    cap = min(cap, N)
+
+    logits = (xf @ p["router"].astype(xf.dtype)).astype(jnp.float32)  # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)  # (N, k)
+    gates = topv / (jnp.sum(topv, axis=-1, keepdims=True) + 1e-9)
+
+    # (N, E) gate matrix: g[n,e] = combined gate if expert e chosen by n
+    chose = jnp.zeros((N, E), jnp.float32)
+    chose = chose.at[jnp.arange(N)[:, None], topi].set(gates)
+
+    # sort-based dispatch: per expert take the first `cap` choosing tokens.
+    # NOTE (perf iterations M1–M3, EXPERIMENTS.md §Perf): per-row "grouped"
+    # routing was tried to kill the dispatch gather's select+all-reduce
+    # lowering; it regressed 5× (the row-local argsort/gather still cross
+    # the seq-sharded axis and multiply under the client vmap).  Global
+    # competition + expert-parallel compute measured strictly better under
+    # GSPMD; a Pallas dispatch kernel is the real fix on hardware.
+    prio = jnp.where(chose > 0, jnp.arange(N, dtype=jnp.int32)[:, None], N)
+    order = jnp.argsort(prio, axis=0)  # (N, E)
+    take = order[:cap]  # (cap, E) token ids
+    w_taken = jnp.take_along_axis(chose, take, axis=0)  # (cap, E); 0 ⇒ filler
+
+    xe = xf[take.T]  # (E, cap, d) gather
+    # every stage of the expert pipeline is pinned to the expert-parallel
+    # layout — propagation alone loses it through the dot_general reshapes
+    # and replicates multi-GiB expert activations on every device
+    xe = sharding.shard(xe, "experts", None, None)
+    gate_h = sharding.shard(_stacked_linear(p["gate"], xe), "experts", None, None)
+    up_h = sharding.shard(_stacked_linear(p["up"], xe), "experts", None, None)
+    h = jax.nn.silu(gate_h) * up_h
+    ye = _stacked_linear(p["down"], h)  # (E, cap, d)
+    ye = sharding.shard(ye, "experts", None, None)
+    ye = ye * w_taken.T[..., None].astype(ye.dtype)
+
+    out = jnp.zeros((N, d), ye.dtype)
+    out = out.at[take.T.reshape(-1)].add(ye.reshape(E * cap, d))
+
+    # shared ("always-on") experts — DeepSeekMoE fine-grained design
+    if "shared_up" in p:
+        hs = jax.nn.silu(_dense_linear(p["shared_gate"], xf)) * _dense_linear(
+            p["shared_up"], xf
+        )
+        out = out + _dense_linear(p["shared_down"], hs)
+
+    # switch-style load-balance auxiliary loss
+    frac_routed = jnp.mean((chose > 0).astype(jnp.float32), axis=0)  # (E,)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = m.aux_loss_weight * E * jnp.sum(frac_routed * mean_prob)
+    return out.reshape(B, T, d), aux

@@ -1,0 +1,130 @@
+"""Logical-axis sharding rules (GSPMD annotations).
+
+Model code tags every parameter and key activation with *logical* axis
+names; this module maps them to mesh axes:
+
+    batch   → ("pod", "data")   — the federated-client axis
+    heads / ffn / experts / vocab / mamba_inner → "model"  (tensor/expert
+                                                             parallelism)
+    everything else → replicated
+
+The mapping is applied only when :data:`ENABLED` is on (the launcher turns
+it on inside a mesh context; CPU unit tests run with it off so no mesh is
+required).  ``with_sharding_constraint`` is likewise gated.
+
+For a factorized weight ``W = U S Vᵀ`` the *bases* carry the tensor-parallel
+sharding of the corresponding dense dimension (U on n_in's axis, V on
+n_out's axis) while the small ``S`` and the rank scalar stay replicated —
+so tensor-parallel partial sums are reduced at width ``r`` instead of the
+dense width: the low-rank bottleneck shrinks TP collectives as well as the
+federated aggregation (quantified in EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.factorization import LowRankFactor, is_factor
+from repro.utils import meshctx
+
+ENABLED = False
+
+# logical axis name → mesh axis (None = replicated)
+RULES = {
+    "batch": ("pod", "data"),
+    "clients": ("pod", "data"),
+    "heads": "model",
+    "kv_heads": "model",
+    "ffn": "model",
+    "experts": "model",
+    "vocab": "model",
+    # FSDP-style factor sharding: low-rank bases are cheap to all-gather
+    # (O(n·r) not O(n²)), so the d_model-sized dim of U/V shards too —
+    # without this, jamba-scale replicated factors dominate device HBM.
+    "embed": "model",
+    "mamba_inner": "model",
+    "rwkv_heads": "model",
+    # sequence parallelism: the residual stream's T dim lives on the model
+    # axis between blocks (works for any head count; GSPMD inserts the
+    # gather/scatter around attention). Decode (T=1) degrades to replicated
+    # automatically via the divisibility check in shard().
+    "seq": "model",
+    "layers": None,
+    "rank": None,
+}
+
+_ACTIVE_MESH_AXES: Tuple[str, ...] = ()
+
+
+def enable(mesh: Optional[jax.sharding.Mesh]):
+    """Turn on sharding annotations for the given mesh (launcher only)."""
+    global ENABLED, _ACTIVE_MESH_AXES
+    meshctx.enable(mesh)
+    if mesh is None:
+        ENABLED = False
+        _ACTIVE_MESH_AXES = ()
+    else:
+        ENABLED = True
+        _ACTIVE_MESH_AXES = tuple(mesh.axis_names)
+
+
+_CLIENT_MODE = False
+
+
+def set_client_mode(on: bool):
+    """Under the FeDLRT client vmap (spmd_axis_name carries the data axes),
+    in-model "batch" constraints must not name those axes — the per-client
+    batch is purely local.  The launcher flips this for train lowering."""
+    global _CLIENT_MODE
+    _CLIENT_MODE = on
+
+
+def _resolve(logical: Optional[str]):
+    if logical is None:
+        return None
+    if _CLIENT_MODE and logical in ("batch", "clients"):
+        return None
+    mesh_axis = RULES.get(logical)
+    if mesh_axis is None:
+        return None
+    if isinstance(mesh_axis, tuple):
+        avail = tuple(a for a in mesh_axis if a in _ACTIVE_MESH_AXES)
+        return avail if avail else None
+    return mesh_axis if mesh_axis in _ACTIVE_MESH_AXES else None
+
+
+def spec(*logical_axes) -> P:
+    """PartitionSpec for a tensor whose dims carry these logical names."""
+    return P(*[_resolve(a) for a in logical_axes])
+
+
+def shard(x, *logical_axes):
+    """Activation sharding constraint (no-op unless ENABLED).
+
+    Dims the mesh does not evenly divide are left unconstrained (GSPMD
+    requires exact divisibility; e.g. 28 heads on a model=16 axis).
+    """
+    if not ENABLED:
+        return x
+    return meshctx.constrain(x, P(*[_resolve(a) for a in logical_axes]))
+
+
+def factor_spec(batch_axes: Tuple[Optional[str], ...], li: Optional[str], lo: Optional[str]):
+    """Sharding pytree for a LowRankFactor with logical dims (li → lo)."""
+    return LowRankFactor(
+        U=spec(*batch_axes, li, "rank"),
+        S=spec(*batch_axes, "rank", "rank"),
+        V=spec(*batch_axes, lo, "rank"),
+        rank=spec(*batch_axes),
+    )
+
+
+def tree_shardings(mesh: jax.sharding.Mesh, spec_tree):
+    """Map a pytree of PartitionSpecs to NamedShardings on ``mesh``."""
+    return jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,384 @@
+"""State-space & linear-RNN sequence mixers: Mamba (Jamba) and RWKV6 (Finch).
+
+Both are attention-free, O(T) mixers, which is what qualifies the
+``rwkv6-7b`` and ``jamba-1.5-large`` configs for the 500k-token decode
+shape.  Their *projection* matrices (in/out, r/k/v/g) are FeDLRT-factorized
+like any other layer; the recurrence parameters (A, conv taps, decay LoRA,
+bonus u) are small structured tensors kept dense (FedLin-style aggregation).
+
+TPU adaptation notes (DESIGN.md §3): the CUDA selective-scan of Mamba and
+the fused wkv kernel of RWKV are re-expressed as
+- Mamba: `associative_scan` over the diagonal SSM recurrence — maps to the
+  TPU's parallel-prefix lowering, channels sharded over the `model` axis
+  (the recurrence is elementwise in channels ⇒ no collectives inside).
+- RWKV6: chunked linear attention (flash-linear-attention style): per-chunk
+  quadratic mixing via MXU matmuls + a lax.scan over chunk states.  This is
+  MXU-friendly where a literal per-token scan would be VPU-bound.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import sharding
+from repro.models.config import ModelConfig
+from repro.models.layers import Builder, apply_linear, rms_norm
+
+Array = jax.Array
+
+
+# ===========================================================================
+# Mamba
+# ===========================================================================
+
+
+@jax.custom_vjp
+def linear_recurrence(a: Array, b: Array, h0: Array) -> Array:
+    """``h_t = a_t ⊙ h_{t-1} + b_t`` along axis 1, returning all ``h_t``.
+
+    Forward uses ``associative_scan`` (parallel-prefix on TPU).  The custom
+    VJP matters: differentiating ``associative_scan`` directly retains
+    O(log T) full-size intermediates per layer (≈50 GiB/device for Jamba's
+    train_4k), while the adjoint is itself a *reverse* linear recurrence —
+        λ_t = ḡ_t + a_{t+1} ⊙ λ_{t+1};  ā_t = λ_t ⊙ h_{t-1};  b̄_t = λ_t
+    — needing only ``a`` and the forward outputs as residuals.
+    """
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    b0 = b.at[:, 0].add(a[:, 0] * h0)
+    _, h = jax.lax.associative_scan(combine, (a, b0), axis=1)
+    return h
+
+
+def _linrec_fwd(a, b, h0):
+    h = linear_recurrence(a, b, h0)
+    return h, (a, h, h0)
+
+
+def _linrec_bwd(res, dh):
+    a, h, h0 = res
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    # λ_t = dh_t + a_{t+1} λ_{t+1}: reverse scan with decay a shifted left
+    a_rev = jnp.flip(a, axis=1)
+    a_shift = jnp.concatenate(
+        [jnp.ones_like(a_rev[:, :1]), a_rev[:, :-1]], axis=1
+    )
+    _, lam_rev = jax.lax.associative_scan(
+        combine, (a_shift, jnp.flip(dh, axis=1)), axis=1
+    )
+    lam = jnp.flip(lam_rev, axis=1)
+    h_prev = jnp.concatenate([h0[:, None], h[:, :-1]], axis=1)
+    da = lam * h_prev
+    db = lam
+    dh0 = a[:, 0] * lam[:, 0]
+    return da, db, dh0
+
+
+linear_recurrence.defvjp(_linrec_fwd, _linrec_bwd)
+
+
+def mamba_dims(cfg: ModelConfig):
+    m = cfg.mamba
+    d_inner = m.expand * cfg.d_model
+    dt_rank = m.dt_rank or -(-cfg.d_model // 16)
+    return d_inner, dt_rank, m.d_state, m.d_conv
+
+
+def build_mamba(b: Builder, prefix: str, cfg: ModelConfig, n_blocks: int):
+    d = cfg.d_model
+    d_inner, dt_rank, d_state, d_conv = mamba_dims(cfg)
+    bs, ba = (n_blocks,), ("layers",)
+    b.linear(f"{prefix}/in_x", d, d_inner, li="embed", lo="mamba_inner",
+             batch_shape=bs, batch_axes=ba)
+    b.linear(f"{prefix}/in_z", d, d_inner, li="embed", lo="mamba_inner",
+             batch_shape=bs, batch_axes=ba)
+    b.linear(f"{prefix}/x_proj", d_inner, dt_rank + 2 * d_state,
+             li="mamba_inner", lo=None, batch_shape=bs, batch_axes=ba)
+    b.linear(f"{prefix}/dt_proj", dt_rank, d_inner, li=None, lo="mamba_inner",
+             batch_shape=bs, batch_axes=ba, bias=True)
+    b.linear(f"{prefix}/out", d_inner, d, li="mamba_inner", lo="embed",
+             batch_shape=bs, batch_axes=ba)
+    # conv taps + SSM parameters (structured, dense)
+    b.normal(f"{prefix}/conv_w", bs + (d_conv, d_inner),
+             axes=ba + (None, "mamba_inner"), scale=0.5 / d_conv)
+    a_log = jnp.log(jnp.arange(1, d_state + 1, dtype=jnp.float32))
+    b._put(f"{prefix}/A_log",
+           jnp.broadcast_to(a_log, bs + (d_inner, d_state)).copy(),
+           sharding.spec(*ba, "mamba_inner", None))
+    b.vector(f"{prefix}/D", bs + (d_inner,), axes=ba + ("mamba_inner",), init=1.0)
+    b.vector(f"{prefix}/dt_bias", bs + (d_inner,), axes=ba + ("mamba_inner",),
+             init=-4.6)  # softplus⁻¹(0.01)
+
+
+def _causal_conv(x: Array, w: Array, tail: Optional[Array]) -> Tuple[Array, Array]:
+    """Depthwise causal conv along T.  x: (B,T,C), w: (K,C).
+
+    ``tail`` is the last K-1 inputs from the previous call (decode cache);
+    returns (y, new_tail).
+    """
+    K = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)  # (B, T+K-1, C)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(K))
+    return y, xp[:, -(K - 1) :]
+
+
+def mamba_mix(
+    p: dict,
+    x: Array,
+    cfg: ModelConfig,
+    *,
+    state: Optional[dict] = None,
+) -> Tuple[Array, Optional[dict]]:
+    """Selective-SSM mixer.  x: (B,T,d).  ``state`` for decode:
+    {"h": (B, d_inner, N), "conv": (B, K-1, d_inner)}."""
+    d_inner, dt_rank, d_state, d_conv = mamba_dims(cfg)
+    dt = x.dtype
+
+    xz = apply_linear(p["in_x"], x)
+    z = apply_linear(p["in_z"], x)
+    xz = sharding.shard(xz, "batch", None, "mamba_inner")
+
+    tail = state["conv"] if state is not None else None
+    xc, new_tail = _causal_conv(xz, p["conv_w"].astype(dt), tail)
+    xc = jax.nn.silu(xc)
+
+    proj = apply_linear(p["x_proj"], xc).astype(jnp.float32)
+    dt_low, Bp, Cp = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    delta = jax.nn.softplus(
+        apply_linear(p["dt_proj"], dt_low.astype(dt), bias=p["dt_bias"]).astype(
+            jnp.float32
+        )
+    )  # (B,T,d_inner) — keep channel-sharded (unpinned it replicates, f32)
+    delta = sharding.shard(delta, "batch", None, "mamba_inner")
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (d_inner, N)
+
+    xc32 = xc.astype(jnp.float32)
+    scan_dt = dt  # bf16 workspace on production configs, f32 on smoke
+    B, T = xc.shape[0], xc.shape[1]
+    d_in = xc.shape[2]
+
+    if state is not None:
+        # decode: T small (usually 1) — step sequentially
+        a = jnp.exp(delta[..., None] * A).astype(scan_dt)
+        b_in = ((delta * xc32)[..., None] * Bp[..., None, :]).astype(scan_dt)
+        h0 = state["h"].astype(scan_dt)
+
+        def step(h, ab):
+            a_t, b_t = ab
+            h = a_t * h + b_t
+            return h, h
+
+        hT, hs = jax.lax.scan(step, h0, (a.swapaxes(0, 1), b_in.swapaxes(0, 1)))
+        h_seq = hs.swapaxes(0, 1)
+        new_state = {"h": hT.astype(jnp.float32), "conv": new_tail}
+        y = jnp.sum(h_seq.astype(jnp.float32) * Cp[..., None, :], axis=-1)
+    else:
+        # training: time-chunked recurrence.  The (B, Lc, d_inner, N)
+        # decay/input products exist one chunk at a time — this bounds the
+        # layer's peak memory (a monolithic T-long workspace is ~T/Lc times
+        # larger and dominated Jamba's train HBM).
+        Lc = min(cfg.mamba.scan_chunk, T)
+        nc = -(-T // Lc)
+        pad = nc * Lc - T
+        padT = lambda z: jnp.pad(z, ((0, 0), (0, pad)) + ((0, 0),) * (z.ndim - 2))
+        dl = padT(delta).reshape(B, nc, Lc, d_in)
+        xcl = padT(delta * xc32).reshape(B, nc, Lc, d_in)
+        Bpl = padT(Bp).reshape(B, nc, Lc, -1)
+        Cpl = padT(Cp).reshape(B, nc, Lc, -1)
+
+        def chunk(h0, xs):
+            d_c, dx_c, B_c, C_c = xs  # (B, Lc, …)
+            a_c = jnp.exp(d_c[..., None] * A).astype(scan_dt)
+            b_c = (dx_c[..., None] * B_c[..., None, :]).astype(scan_dt)
+            h_c = linear_recurrence(a_c, b_c, h0)
+            y_c = jnp.sum(h_c.astype(jnp.float32) * C_c[..., None, :], axis=-1)
+            return h_c[:, -1], y_c
+
+        body = jax.checkpoint(chunk, prevent_cse=False) if T > Lc else chunk
+        xs = tuple(z.swapaxes(0, 1) for z in (dl, xcl, Bpl, Cpl))
+        _, ys = jax.lax.scan(
+            body, jnp.zeros((B, d_in, d_state), scan_dt), xs
+        )
+        y = ys.swapaxes(0, 1).reshape(B, nc * Lc, d_in)[:, :T]
+        new_state = None
+
+    y = y + p["D"].astype(jnp.float32) * xc32
+    y = (y.astype(dt)) * jax.nn.silu(z)
+    out = apply_linear(p["out"], y)
+    return out, new_state
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d_inner, _, d_state, d_conv = mamba_dims(cfg)
+    return {
+        "h": jnp.zeros((batch, d_inner, d_state), jnp.float32),
+        "conv": jnp.zeros((batch, d_conv - 1, d_inner), dtype),
+    }
+
+
+# ===========================================================================
+# RWKV6 (Finch) — data-dependent decay linear attention
+# ===========================================================================
+
+
+def rwkv_dims(cfg: ModelConfig):
+    hd = cfg.rwkv.head_dim
+    H = cfg.d_model // hd
+    return H, hd
+
+
+def build_rwkv(b: Builder, prefix: str, cfg: ModelConfig, n_blocks: int):
+    d = cfg.d_model
+    H, hd = rwkv_dims(cfg)
+    lora = cfg.rwkv.decay_lora
+    bs, ba = (n_blocks,), ("layers",)
+    for name in ("r", "k", "v", "g"):
+        b.linear(f"{prefix}/{name}", d, d, li="embed", lo="rwkv_heads",
+                 batch_shape=bs, batch_axes=ba)
+    b.linear(f"{prefix}/out", d, d, li="rwkv_heads", lo="embed",
+             batch_shape=bs, batch_axes=ba)
+    # data-dependent decay LoRA (the Finch mechanism) — small, dense
+    b.normal(f"{prefix}/w_lora_a", bs + (d, lora), axes=ba + (None, None), scale=0.02)
+    b.normal(f"{prefix}/w_lora_b", bs + (lora, d), axes=ba + (None, "rwkv_heads"), scale=0.02)
+    b.vector(f"{prefix}/w0", bs + (d,), axes=ba + ("rwkv_heads",), init=-1.0)
+    b.vector(f"{prefix}/u", bs + (H, hd), axes=ba + ("rwkv_heads", None), init=0.5)
+    # static token-shift mixing coefficients (simplified from ddlerp)
+    for name in ("mu_r", "mu_k", "mu_v", "mu_g", "mu_w"):
+        b.vector(f"{prefix}/{name}", bs + (d,), axes=ba + (None,), init=0.5)
+    b.vector(f"{prefix}/ln_x", bs + (d,), axes=ba + ("rwkv_heads",), init=1.0)
+
+
+def _token_shift(x: Array, prev: Optional[Array]) -> Tuple[Array, Array]:
+    """Shift right by one along T; ``prev`` is the last token of the
+    previous segment (decode cache)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    xx = jnp.concatenate([prev, x[:, :-1]], axis=1)
+    return xx, x[:, -1:]
+
+
+def _rwkv_chunked(
+    r: Array, k: Array, v: Array, logw: Array, u: Array, S0: Array, chunk: int
+) -> Tuple[Array, Array]:
+    """Chunked wkv.  r,k,v: (B,T,H,hd); logw ≤ 0: (B,T,H,hd); u: (H,hd).
+
+    Recurrence (per head, hd_k = hd_v = hd):
+        S_t = diag(w_t) S_{t-1} + k_tᵀ v_t
+        o_t = r_t S_{t-1} + (r_t ⊙ u)·k_t · v_t
+    Returns (o: (B,T,H,hd), S_T: (B,H,hd,hd)).
+    """
+    B, T, H, hd = r.shape
+    L = min(chunk, T)
+    n = -(-T // L)
+    pad = n * L - T
+    if pad:
+        zp = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zp(r), zp(k), zp(v)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    shp = (B, n, L, H, hd)
+    rc, kc, vc = r.reshape(shp), k.reshape(shp), v.reshape(shp),
+    lwc = logw.reshape(shp)
+
+    # within-chunk inclusive log-decay prefix  P_t = Σ_{m≤t} logw_m
+    lp = jnp.cumsum(lwc, axis=2)  # (B,n,L,H,hd)
+    lp_prev = lp - lwc  # exclusive prefix Σ_{m<t}
+    CLAMP = 30.0
+    r_t = rc * jnp.exp(jnp.maximum(lp_prev, -CLAMP))  # r̃_t = r_t ⊙ W_{<t}
+    k_t = kc * jnp.exp(jnp.minimum(-lp, CLAMP))  # k̃_i = k_i / W_{≤i}
+
+    # intra-chunk strict-lower attention  (B,n,H,L,L)
+    att = jnp.einsum("bnlhd,bnmhd->bnhlm", r_t, k_t)
+    tri = jnp.tril(jnp.ones((L, L), bool), k=-1)
+    att = att * tri[None, None, None]
+    # diagonal bonus term
+    bonus = jnp.einsum("bnlhd,hd,bnlhd->bnlh", rc, u, kc)
+    intra = jnp.einsum("bnhlm,bnmhd->bnlhd", att, vc)
+    intra = intra + bonus[..., None] * vc
+
+    # cross-chunk: scan over chunk states
+    k_for_state = kc * jnp.exp(jnp.minimum(lp[:, :, -1:] - lp, CLAMP))  # k_i ⊙ W_{i+1..L}
+    dS = jnp.einsum("bnlhd,bnlhe->bnhde", k_for_state, vc)  # (B,n,H,hd,hd)
+    wtot = jnp.exp(jnp.maximum(lp[:, :, -1], -CLAMP))  # (B,n,H,hd)
+
+    def chunk_step(S, inp):
+        dS_c, wtot_c, r_c = inp  # (B,H,hd,hd), (B,H,hd), (B,L,H,hd)
+        inter = jnp.einsum("blhd,bhde->blhe", r_c, S)
+        S_new = S * wtot_c[..., None] + dS_c
+        return S_new, inter
+
+    xs = (dS.swapaxes(0, 1), wtot.swapaxes(0, 1), r_t.swapaxes(0, 1))
+    S_T, inters = jax.lax.scan(chunk_step, S0, xs)
+    inter = inters.swapaxes(0, 1)  # (B,n,L,H,hd)
+
+    o = (intra + inter).reshape(B, n * L, H, hd)
+    return o[:, :T], S_T
+
+
+def rwkv_mix(
+    p: dict,
+    x: Array,
+    cfg: ModelConfig,
+    *,
+    state: Optional[dict] = None,
+) -> Tuple[Array, Optional[dict]]:
+    """RWKV6 time-mixing.  state = {"S": (B,H,hd,hd), "shift": (B,1,d)}."""
+    B, T, d = x.shape
+    H, hd = rwkv_dims(cfg)
+    dt = x.dtype
+
+    prev = state["shift"] if state is not None else None
+    xx, last = _token_shift(x, prev)
+
+    def mix(mu):
+        return x + (xx - x) * mu.astype(dt)
+
+    r = apply_linear(p["r"], mix(p["mu_r"])).reshape(B, T, H, hd)
+    k = apply_linear(p["k"], mix(p["mu_k"])).reshape(B, T, H, hd)
+    v = apply_linear(p["v"], mix(p["mu_v"])).reshape(B, T, H, hd)
+    g = apply_linear(p["g"], mix(p["mu_g"]))
+
+    # data-dependent decay (Finch): w = exp(-exp(w0 + tanh(x A) B))
+    xw = mix(p["mu_w"]).astype(jnp.float32)
+    dd = jnp.tanh(xw @ p["w_lora_a"].astype(jnp.float32)) @ p["w_lora_b"].astype(
+        jnp.float32
+    )
+    logw = -jnp.exp(
+        jnp.clip(p["w0"].astype(jnp.float32) + dd, -8.0, 4.0)
+    )  # ≤ 0, (B,T,d)
+    logw = logw.reshape(B, T, H, hd)
+
+    r32, k32, v32 = (a.astype(jnp.float32) for a in (r, k, v))
+    u = p["u"].astype(jnp.float32)
+    S0 = (
+        state["S"].astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((B, H, hd, hd), jnp.float32)
+    )
+    o, S_T = _rwkv_chunked(r32, k32, v32, logw, u, S0, cfg.rwkv.chunk_len)
+
+    o = o.reshape(B, T, d)
+    o = rms_norm(o, p["ln_x"], cfg.norm_eps).astype(dt)
+    o = o * jax.nn.silu(g)
+    out = apply_linear(p["out"], o)
+    new_state = {"S": S_T, "shift": last} if state is not None else None
+    return out, new_state
+
+
+def rwkv_init_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    H, hd = rwkv_dims(cfg)
+    return {
+        "S": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "shift": jnp.zeros((batch, 1, cfg.d_model), dtype),
+    }

@@ -1,0 +1,336 @@
+"""Block assembly: attention/Mamba/RWKV mixers + MLP/MoE, scanned stacks.
+
+Layer stacks are organized as *superblocks*: the repeating
+``cfg.block_pattern`` is unrolled inside a ``lax.scan`` body whose xs are
+the per-position parameter stacks (leading dim = number of superblocks).
+This preserves the true layer interleaving (e.g. Jamba's 7:1 mamba:attn)
+while keeping the lowered HLO one-superblock-sized — essential for CPU
+compile times of the 512-device dry-run.
+
+Serving: every mixer exposes a cache slice; the same scan threads cache
+slices through as scan ys, so decode is a single fused HLO too.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import sharding
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    Builder,
+    apply_linear,
+    apply_rope,
+    attention,
+    rms_norm,
+)
+from repro.models.moe import build_moe, moe_block
+from repro.models.ssm import (
+    build_mamba,
+    build_rwkv,
+    mamba_init_state,
+    mamba_mix,
+    rwkv_init_state,
+    rwkv_mix,
+)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# parameter construction
+# ---------------------------------------------------------------------------
+
+
+def build_attn(b: Builder, prefix: str, cfg: ModelConfig, n_blocks: int, *, cross: bool = False):
+    d, H, Hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    bs, ba = (n_blocks,), ("layers",)
+    b.linear(f"{prefix}/q", d, H * hd, li="embed", lo="heads",
+             batch_shape=bs, batch_axes=ba, bias=cfg.qkv_bias)
+    b.linear(f"{prefix}/k", d, Hkv * hd, li="embed", lo="kv_heads",
+             batch_shape=bs, batch_axes=ba, bias=cfg.qkv_bias)
+    b.linear(f"{prefix}/v", d, Hkv * hd, li="embed", lo="kv_heads",
+             batch_shape=bs, batch_axes=ba, bias=cfg.qkv_bias)
+    b.linear(f"{prefix}/o", H * hd, d, li="heads", lo="embed",
+             batch_shape=bs, batch_axes=ba)
+    if cfg.qk_norm:
+        b.vector(f"{prefix}/q_norm", bs + (hd,), axes=ba + (None,))
+        b.vector(f"{prefix}/k_norm", bs + (hd,), axes=ba + (None,))
+    if cross:
+        b.linear(f"{prefix}/xq", d, H * hd, li="embed", lo="heads",
+                 batch_shape=bs, batch_axes=ba)
+        b.linear(f"{prefix}/xk", d, Hkv * hd, li="embed", lo="kv_heads",
+                 batch_shape=bs, batch_axes=ba)
+        b.linear(f"{prefix}/xv", d, Hkv * hd, li="embed", lo="kv_heads",
+                 batch_shape=bs, batch_axes=ba)
+        b.linear(f"{prefix}/xo", H * hd, d, li="heads", lo="embed",
+                 batch_shape=bs, batch_axes=ba)
+        b.vector(f"{prefix}/ln_x", bs + (d,), axes=ba + (None,))
+
+
+def build_mlp(b: Builder, prefix: str, cfg: ModelConfig, n_blocks: int):
+    d, dff = cfg.d_model, cfg.d_ff
+    bs, ba = (n_blocks,), ("layers",)
+    if cfg.gated_mlp:
+        b.linear(f"{prefix}/gate", d, dff, li="embed", lo="ffn",
+                 batch_shape=bs, batch_axes=ba)
+    b.linear(f"{prefix}/up", d, dff, li="embed", lo="ffn",
+             batch_shape=bs, batch_axes=ba)
+    b.linear(f"{prefix}/down", dff, d, li="ffn", lo="embed",
+             batch_shape=bs, batch_axes=ba)
+
+
+def build_block(b: Builder, prefix: str, kind: str, cfg: ModelConfig,
+                n_blocks: int, *, moe_here: bool, cross: bool = False):
+    bs, ba = (n_blocks,), ("layers",)
+    b.vector(f"{prefix}/ln1", bs + (cfg.d_model,), axes=ba + (None,))
+    b.vector(f"{prefix}/ln2", bs + (cfg.d_model,), axes=ba + (None,))
+    if kind == "attn":
+        build_attn(b, f"{prefix}/attn", cfg, n_blocks, cross=cross)
+    elif kind == "mamba":
+        build_mamba(b, f"{prefix}/mamba", cfg, n_blocks)
+    elif kind == "rwkv":
+        build_rwkv(b, f"{prefix}/rwkv", cfg, n_blocks)
+    else:
+        raise ValueError(kind)
+    if moe_here:
+        build_moe(b, f"{prefix}/moe", cfg, n_blocks)
+    else:
+        build_mlp(b, f"{prefix}/mlp", cfg, n_blocks)
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+
+def attn_mix(
+    p: dict,
+    x: Array,
+    cfg: ModelConfig,
+    *,
+    positions: Array,
+    cache: Optional[dict],
+    causal: bool = True,
+    cross_kv: Optional[Tuple[Array, Array]] = None,
+    use_rope: bool = True,
+):
+    """Self-attention (+ optional cached decode, + optional cross-attn block).
+
+    cache: {"k": (B,S,Hkv,hd), "v": ..., "idx": scalar int32} or None.
+    Returns (y, new_cache).
+    """
+    B, T, d = x.shape
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q = apply_linear(p["q"], x, bias=p.get("q_b")).reshape(B, T, H, hd)
+    k = apply_linear(p["k"], x, bias=p.get("k_b")).reshape(B, T, Hkv, hd)
+    v = apply_linear(p["v"], x, bias=p.get("v_b")).reshape(B, T, Hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    # context parallelism: queries stay sequence-sharded; keys/values are
+    # gathered (small for GQA) so every shard attends over the full context
+    q = sharding.shard(q, "batch", "seq", None, None)
+
+    new_cache = None
+    if cache is not None:
+        S = cache["k"].shape[1]
+        if cfg.sliding_window and S < cfg.sliding_window and S < 4096:
+            raise ValueError("cache smaller than the attention window")
+        # ring/linear write at idx (mod cache length).  NOTE: a multi-token
+        # write (prefill) must not wrap: callers size the prefill cache at
+        # ≥ prompt length; decode writes are single-token and wrap freely.
+        slot = (cache["idx"] % S).astype(jnp.int32)
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        # absolute position held by each slot: the newest p ≤ newest-written
+        # position with p % S == s; slots never written → negative → masked.
+        s_idx = jnp.arange(S, dtype=jnp.int32)
+        newest = cache["idx"].astype(jnp.int32) + T - 1
+        kv_pos = newest - ((newest - s_idx) % S)
+        kv_pos = jnp.where(kv_pos < 0, jnp.int32(-(10**9)), kv_pos)
+        y = attention(
+            q, ck, cv,
+            q_positions=positions, kv_positions=kv_pos,
+            causal=causal, sliding_window=cfg.sliding_window,
+            q_chunk=cfg.attn_q_chunk,
+        )
+        new_cache = {"k": ck, "v": cv, "idx": cache["idx"] + T}
+    else:
+        kv_pos = positions
+        y = attention(
+            q, k, v,
+            q_positions=positions, kv_positions=kv_pos,
+            causal=causal, sliding_window=cfg.sliding_window,
+            q_chunk=cfg.attn_q_chunk,
+        )
+
+    y = sharding.shard(y, "batch", "seq", None, None)
+    out = apply_linear(p["o"], y.reshape(B, T, H * hd))
+
+    if cross_kv is not None:
+        # cross_kv: encoder hidden states (B, Tenc, d)
+        xh = rms_norm(x + out, p["ln_x"], cfg.norm_eps)
+        qx = apply_linear(p["xq"], xh).reshape(B, T, H, hd)
+        Tenc = cross_kv.shape[1]
+        ek = apply_linear(p["xk"], cross_kv).reshape(B, Tenc, Hkv, hd)
+        ev = apply_linear(p["xv"], cross_kv).reshape(B, Tenc, Hkv, hd)
+        yx = attention(
+            qx, ek, ev,
+            q_positions=positions,
+            kv_positions=jnp.arange(Tenc),
+            causal=False, sliding_window=0, q_chunk=cfg.attn_q_chunk,
+        )
+        out = out + apply_linear(p["xo"], yx.reshape(B, T, H * hd))
+    return out, new_cache
+
+
+def mlp_apply(p: dict, x: Array, cfg: ModelConfig) -> Array:
+    if cfg.gated_mlp:
+        h = jax.nn.silu(apply_linear(p["gate"], x)) * apply_linear(p["up"], x)
+    else:
+        h = jax.nn.gelu(apply_linear(p["up"], x))
+    h = sharding.shard(h, "batch", "seq", None)
+    return apply_linear(p["down"], h)
+
+
+def block_apply(
+    p: dict,
+    kind: str,
+    x: Array,
+    cfg: ModelConfig,
+    *,
+    positions: Array,
+    cache: Optional[dict],
+    causal: bool = True,
+    cross_kv=None,
+    use_rope: bool = True,
+):
+    """One (mixer + FFN/MoE) block with pre-norm residuals.
+
+    Returns (x, new_cache, aux_loss)."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        mix_out, new_cache = attn_mix(
+            p["attn"], h, cfg, positions=positions, cache=cache,
+            causal=causal, cross_kv=cross_kv, use_rope=use_rope,
+        )
+    elif kind == "mamba":
+        mix_out, new_cache = mamba_mix(p["mamba"], h, cfg, state=cache)
+    elif kind == "rwkv":
+        mix_out, new_cache = rwkv_mix(p["rwkv"], h, cfg, state=cache)
+    else:
+        raise ValueError(kind)
+    x = x + mix_out
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        ffn_out, aux = moe_block(p["moe"], h2, cfg)
+    else:
+        ffn_out, aux = mlp_apply(p["mlp"], h2, cfg), jnp.zeros((), jnp.float32)
+    return x + ffn_out, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# scanned stack over superblocks
+# ---------------------------------------------------------------------------
+
+
+def init_cache_stack(cfg: ModelConfig, batch: int, cache_len: int, dtype) -> dict:
+    """Per-position cache stacks (leading dim = superblocks)."""
+    NB = cfg.superblocks
+    Hkv, hd = cfg.num_kv_heads, cfg.hd
+    caches = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        if kind == "attn":
+            c = {
+                "k": jnp.zeros((NB, batch, cache_len, Hkv, hd), dtype),
+                "v": jnp.zeros((NB, batch, cache_len, Hkv, hd), dtype),
+                "idx": jnp.zeros((NB,), jnp.int32),
+            }
+        elif kind == "mamba":
+            c = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (NB,) + x.shape).copy(),
+                mamba_init_state(cfg, batch, dtype),
+            )
+        elif kind == "rwkv":
+            c = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (NB,) + x.shape).copy(),
+                rwkv_init_state(cfg, batch, dtype),
+            )
+        else:
+            raise ValueError(kind)
+        caches[f"pos{i}"] = c
+    return caches
+
+
+def stack_apply(
+    blocks: dict,
+    x: Array,
+    cfg: ModelConfig,
+    *,
+    positions: Array,
+    caches: Optional[dict] = None,
+    causal: bool = True,
+    cross_kv=None,
+    use_rope: bool = True,
+    pattern: Optional[Tuple[str, ...]] = None,
+    moe_positions: Optional[Tuple[bool, ...]] = None,
+):
+    """Scan the superblock stack.  blocks/caches: dicts of stacked params.
+
+    Returns (x, new_caches, total_aux)."""
+    pattern = pattern or cfg.block_pattern
+
+    # remat per *layer*, not per superblock: a superblock backward would
+    # otherwise hold every member layer's recomputed internals live at once
+    # (ruinous for Jamba's 7 Mamba layers per superblock).
+    def one_block(kind):
+        def f(p_i, h, c_i):
+            # pin the layout of the residual stream at every layer: the
+            # checkpoint below saves this tensor, and an unpinned save point
+            # is replicated (72 × full-T·d f32 on jamba — dozens of GiB)
+            h = sharding.shard(h, "batch", "seq", None)
+            return block_apply(
+                p_i, kind, h, cfg,
+                positions=positions, cache=c_i, causal=causal,
+                cross_kv=cross_kv, use_rope=use_rope,
+            )
+
+        if cfg.remat:
+            return jax.checkpoint(f, prevent_cse=False)
+        return f
+
+    block_fns = [one_block(kind) for kind in pattern]
+
+    def superblock(carry, xs):
+        h, aux = carry
+        h = sharding.shard(h, "batch", "seq", None)
+        p_sb, c_sb = xs
+        new_c = {}
+        for i, kind in enumerate(pattern):
+            c_i = c_sb.get(f"pos{i}") if c_sb is not None else None
+            h, nc, a = block_fns[i](p_sb[f"pos{i}"], h, c_i)
+            if nc is not None:
+                new_c[f"pos{i}"] = nc
+            aux = aux + a
+        return (h, aux), (new_c if new_c else None)
+
+    body = superblock
+
+    if caches is None:
+        (h, aux), _ = jax.lax.scan(
+            lambda c, p_sb: (body(c, (p_sb, None))[0], ()),
+            (x, jnp.zeros((), jnp.float32)),
+            blocks,
+        )
+        return h, None, aux
+    (h, aux), new_caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (blocks, caches)
+    )
+    return h, new_caches, aux

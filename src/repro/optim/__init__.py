@@ -1,0 +1,2 @@
+from repro.optim.optimizers import Optimizer, adam, sgd, make_optimizer  # noqa: F401
+from repro.optim.schedules import constant_schedule, cosine_schedule  # noqa: F401

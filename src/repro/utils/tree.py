@@ -1,0 +1,56 @@
+"""Small pytree helpers used across the federated runtime.
+
+These are deliberately free of any model/optimizer knowledge so they can be
+used on raw param pytrees, gradient pytrees, and optimizer-state pytrees
+alike.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x, y):
+    """alpha * x + y, leafwise."""
+    return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_mean_leading_axis(tree):
+    """Mean over a leading (client) axis on every leaf.
+
+    Under GSPMD, when the leading axis is sharded over the ("pod", "data")
+    mesh axes, this lowers to the server `aggregate` all-reduce of the paper.
+    """
+    return jax.tree.map(lambda x: jnp.mean(x, axis=0), tree)
+
+
+def tree_global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return jnp.zeros(())
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def tree_size_bytes(tree) -> int:
+    """Static byte count of a pytree (python int; usable outside jit)."""
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_count_params(tree) -> int:
+    return sum(x.size for x in jax.tree.leaves(tree))

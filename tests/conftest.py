@@ -1,0 +1,56 @@
+"""Shared fixtures: least-squares problems + loss functions.
+
+NOTE: no XLA_FLAGS device-count override here — smoke tests and benches
+must see the single real CPU device; only launch/dryrun.py forces 512
+placeholder devices (in its own process).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import make_heterogeneous_lsq, make_homogeneous_lsq
+
+
+def lsq_loss(f, batch):
+    """Paper §4.1 loss on a LowRankFactor/AugmentedFactor (through the bottleneck)."""
+    pred = jnp.sum(((batch["px"] @ f.U) @ f.S) * (batch["py"] @ f.V), -1)
+    return 0.5 * jnp.mean((pred - batch["t"]) ** 2)
+
+
+def lsq_dense_loss(W, batch):
+    pred = jnp.einsum("ni,ij,nj->n", batch["px"], W, batch["py"])
+    return 0.5 * jnp.mean((pred - batch["t"]) ** 2)
+
+
+def as_batches(prob):
+    return {
+        "px": jnp.asarray(prob.px),
+        "py": jnp.asarray(prob.py),
+        "t": jnp.asarray(prob.target),
+    }
+
+
+def optimal_loss(prob):
+    out = []
+    for c in range(prob.px.shape[0]):
+        pred = np.einsum("ni,ij,nj->n", prob.px[c], prob.W_star, prob.py[c])
+        out.append(0.5 * np.mean((pred - prob.target[c]) ** 2))
+    return float(np.mean(out))
+
+
+@pytest.fixture(scope="session")
+def homo_prob():
+    return make_homogeneous_lsq(n=20, rank=4, num_points=2000, num_clients=4, seed=0)
+
+
+@pytest.fixture(scope="session")
+def hetero_prob():
+    return make_heterogeneous_lsq(n=10, rank=1, num_points=1000, num_clients=4, seed=0)
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

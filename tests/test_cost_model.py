@@ -1,0 +1,45 @@
+"""Cost-model unit tests (paper Table 1 / Fig. 3)."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import init_factor
+from repro.core import cost_model as cm
+
+
+def test_table1_rows_exist():
+    for method in ("fedavg", "fedlin", "fedlrt", "fedlrt_simplified", "fedlrt_full", "fedlr"):
+        row = cm.table1(method, n=512, r=32, s_star=4, b=2)
+        assert row["comm"] > 0 and row["client_compute"] > 0
+
+
+def test_fedlrt_beats_fedlin_below_amortization():
+    n = 512
+    r_am = cm.amortization_rank(n)
+    assert 0.3 * n < r_am < 0.5 * n  # paper: ≈ 40% of full rank at n=512
+    lo = cm.table1("fedlrt_simplified", n=n, r=int(r_am * 0.5))["comm"]
+    hi = cm.table1("fedlrt_simplified", n=n, r=int(r_am * 1.5))["comm"]
+    ref = cm.table1("fedlin", n=n, r=0)["comm"]
+    assert lo < ref < hi
+
+
+def test_exact_counter_matches_manual():
+    f = init_factor(jax.random.PRNGKey(0), 100, 60, r_max=8)
+    r = 8
+    nr = (100 + 60) * r
+    expect = (nr + r * r) + nr + nr + 2 * r * r + (2 * r) ** 2
+    got = cm.fedlrt_round_comm_bytes({"w": f}, "simplified")
+    assert got == expect * cm.BYTES
+
+
+def test_dense_counter():
+    params = {"w": jnp.zeros((64, 64)), "b": jnp.zeros((64,))}
+    assert cm.dense_round_comm_bytes(params, "fedavg") == 2 * (64 * 64 + 64) * 4
+    assert cm.dense_round_comm_bytes(params, "fedlin") == 4 * (64 * 64 + 64) * 4
+
+
+def test_client_flops_scale_linearly_in_n():
+    f1 = init_factor(jax.random.PRNGKey(0), 256, 256, r_max=16)
+    f2 = init_factor(jax.random.PRNGKey(0), 512, 512, r_max=16)
+    a = cm.client_flops_per_local_step({"w": f1}, batch_tokens=32)
+    b = cm.client_flops_per_local_step({"w": f2}, batch_tokens=32)
+    assert 1.8 < b / a < 2.2

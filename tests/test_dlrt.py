@@ -1,0 +1,111 @@
+"""Unit tests for the BUG-splitting primitives (augment / truncate)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dlrt import augment_basis, pick_rank, qr_pos, truncate
+from repro.core.factorization import (
+    AugmentedFactor,
+    init_factor,
+    materialize,
+)
+
+
+def test_qr_pos_preserves_leading_orthonormal_block(rng_key):
+    f = init_factor(rng_key, 40, 40, r_max=8)
+    G = jax.random.normal(jax.random.PRNGKey(1), (40, 8))
+    Q = qr_pos(jnp.concatenate([f.U, G], axis=1))
+    # Lemma 1 precondition: Q's leading columns equal U exactly
+    np.testing.assert_allclose(Q[:, :8], f.U, atol=1e-5)
+    np.testing.assert_allclose(Q.T @ Q, jnp.eye(16), atol=1e-5)
+
+
+@pytest.mark.parametrize("method", ["cholqr2", "householder"])
+def test_augment_lemma1(rng_key, method):
+    """S̃ = [[S,0],[0,0]] must equal the explicit projection ŨᵀUSVᵀṼ (Lemma 1)."""
+    f = init_factor(rng_key, 40, 30, r_max=6, init_rank=4)
+    GU = jax.random.normal(jax.random.PRNGKey(1), f.U.shape)
+    GV = jax.random.normal(jax.random.PRNGKey(2), f.V.shape)
+    aug = augment_basis(f, GU, GV, method=method)
+    explicit = aug.U.T @ materialize(f) @ aug.V
+    np.testing.assert_allclose(aug.S, explicit, atol=1e-4)
+    # augmented factor represents the same matrix
+    np.testing.assert_allclose(materialize(aug), materialize(f), atol=1e-4)
+    # active augmented columns orthonormal; inactive exactly zero
+    from repro.core.factorization import augmented_mask
+
+    am = augmented_mask(f.rank, f.r_max)
+    gram = aug.U.T @ aug.U
+    want = jnp.eye(12) * am[None, :] * am[:, None]
+    np.testing.assert_allclose(gram * am[None] * am[:, None], want, atol=1e-4)
+    np.testing.assert_allclose(aug.U * (1 - am)[None, :], 0.0, atol=1e-6)
+
+
+def test_augment_contains_gradient_span(rng_key):
+    """The augmented column space must contain span(U) + span(G_U) (Eq. 6)."""
+    f = init_factor(rng_key, 40, 40, r_max=4, init_rank=4)
+    GU = jax.random.normal(jax.random.PRNGKey(1), f.U.shape)
+    aug = augment_basis(f, GU, GU)
+    P = aug.U @ aug.U.T  # projector onto augmented span
+    for M in (f.U, GU):
+        np.testing.assert_allclose(P @ M, M, atol=1e-4)
+
+
+def test_pick_rank():
+    sigma = jnp.array([4.0, 2.0, 1.0, 0.1, 0.01, 0.0])
+    # keep while tail-norm >= theta
+    # tails: k=3 → ‖[.1,.01,0]‖≈.1005, k=2 → ≈1.005, k=1 → ≈2.24
+    assert float(pick_rank(sigma, jnp.float32(0.2), r_max=3)) == 3
+    assert float(pick_rank(sigma, jnp.float32(1.5), r_max=3)) == 2
+    assert float(pick_rank(sigma, jnp.float32(3.0), r_max=3)) == 1
+    assert float(pick_rank(sigma, jnp.float32(100.0), r_max=3)) == 1
+    # never exceeds r_max
+    assert float(pick_rank(sigma, jnp.float32(1e-9), r_max=4)) == 4
+
+
+def test_truncate_error_bound(rng_key):
+    """‖W_trunc − W̃*‖ ≤ ϑ (the singular-value tail criterion)."""
+    f = init_factor(rng_key, 40, 40, r_max=8, init_rank=8)
+    GU = jax.random.normal(jax.random.PRNGKey(1), f.U.shape)
+    GV = jax.random.normal(jax.random.PRNGKey(2), f.V.shape)
+    aug = augment_basis(f, GU, GV)
+    S_star = jax.random.normal(jax.random.PRNGKey(3), aug.S.shape)
+    aug = AugmentedFactor(U=aug.U, S=S_star, V=aug.V, rank=aug.rank)
+    new_f, info = truncate(aug, tau=0.3)
+    err = jnp.linalg.norm(materialize(new_f) - materialize(aug))
+    # err equals the discarded tail; both must respect the reported values
+    np.testing.assert_allclose(err, info["trunc_err"], rtol=1e-3, atol=1e-4)
+    assert 1 <= float(info["rank"]) <= f.r_max
+
+
+def test_truncate_keeps_invariants(rng_key):
+    f = init_factor(rng_key, 32, 32, r_max=6, init_rank=6)
+    GU = jax.random.normal(jax.random.PRNGKey(1), f.U.shape)
+    GV = jax.random.normal(jax.random.PRNGKey(2), f.V.shape)
+    aug = augment_basis(f, GU, GV)
+    new_f, info = truncate(aug, tau=0.1)
+    from repro.core.factorization import check_invariants
+
+    inv = check_invariants(new_f)
+    assert float(inv["u_ortho_defect"]) < 1e-3
+    assert float(inv["v_ortho_defect"]) < 1e-3
+    assert float(inv["s_mask_violation"]) < 1e-6
+    # S is diagonal after truncation
+    S = np.asarray(new_f.S)
+    np.testing.assert_allclose(S, np.diag(np.diag(S)), atol=1e-6)
+
+
+def test_low_rank_target_recovers_exact_rank(rng_key):
+    """Truncating a noiseless rank-3 coefficient finds rank exactly 3."""
+    f = init_factor(rng_key, 32, 32, r_max=8, init_rank=8)
+    GU = jax.random.normal(jax.random.PRNGKey(1), f.U.shape)
+    GV = jax.random.normal(jax.random.PRNGKey(2), f.V.shape)
+    aug = augment_basis(f, GU, GV)
+    a = jax.random.normal(jax.random.PRNGKey(3), (16, 3))
+    b = jax.random.normal(jax.random.PRNGKey(4), (16, 3))
+    S_star = a @ b.T
+    new_f, info = truncate(
+        AugmentedFactor(U=aug.U, S=S_star, V=aug.V, rank=aug.rank), tau=1e-4
+    )
+    assert float(info["rank"]) == 3

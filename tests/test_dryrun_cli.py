@@ -1,0 +1,50 @@
+"""End-to-end dry-run CLI test (subprocess — owns its 512-device env).
+
+Runs the fastest real combo (rwkv6-7b × long_500k, ~10 s compile) through
+``python -m repro.launch.dryrun`` and validates the emitted JSON artifact:
+roofline terms present and positive, memory analysis populated, and the
+documented-skip path for a full-attention arch.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(args, out_dir):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--out", str(out_dir)] + args
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    return subprocess.run(
+        cmd, capture_output=True, text=True, env=env, cwd=ROOT, timeout=420
+    )
+
+
+@pytest.mark.slow
+def test_dryrun_cli_compiles_and_reports(tmp_path):
+    p = _run(["--arch", "rwkv6-7b", "--shape", "long_500k"], tmp_path)
+    assert p.returncode == 0, p.stderr[-2000:]
+    assert "OK" in p.stdout
+    path = tmp_path / "16x16__rwkv6-7b__long_500k.json"
+    with open(path) as f:
+        res = json.load(f)
+    assert res["devices"] == 256
+    rf = res["roofline"]
+    assert rf["collective_bytes_per_device"] > 0
+    assert rf["memory_s"] > 0
+    assert rf["dominant"] in ("compute", "memory", "collective")
+    assert res["memory"]["temp_bytes"] > 0
+    assert res["compile_s"] > 0
+
+
+@pytest.mark.slow
+def test_dryrun_cli_documented_skip(tmp_path):
+    p = _run(["--arch", "qwen2-7b", "--shape", "long_500k"], tmp_path)
+    assert p.returncode == 0
+    assert "SKIP" in p.stdout
+    with open(tmp_path / "skip__qwen2-7b__long_500k.json") as f:
+        res = json.load(f)
+    assert "sub-quadratic" in res["skipped"]

@@ -1,0 +1,95 @@
+"""Unit tests for the masked adaptive-rank factor algebra."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.factorization import (
+    LowRankFactor,
+    augmented_mask,
+    check_invariants,
+    init_factor,
+    lr_matmul,
+    lr_rowlookup,
+    mask_coeff,
+    materialize,
+    rank_mask,
+)
+
+
+def test_init_invariants(rng_key):
+    f = init_factor(rng_key, 64, 48, r_max=12, init_rank=7)
+    inv = check_invariants(f)
+    assert float(inv["u_ortho_defect"]) < 1e-4
+    assert float(inv["v_ortho_defect"]) < 1e-4
+    assert float(inv["s_mask_violation"]) == 0.0
+    assert float(f.rank) == 7
+
+
+def test_rank_buffer_cap(rng_key):
+    # r_max is capped at min(n_in, n_out)//2 so augmentation always fits
+    f = init_factor(rng_key, 10, 40, r_max=32)
+    assert f.r_max == 5
+
+
+def test_materialize_rank(rng_key):
+    f = init_factor(rng_key, 32, 32, r_max=8, init_rank=3)
+    W = materialize(f)
+    s = jnp.linalg.svd(W, compute_uv=False)
+    assert float(s[3]) < 1e-5 * float(s[0])  # numerically rank 3
+
+
+def test_lr_matmul_matches_materialized(rng_key):
+    f = init_factor(rng_key, 32, 24, r_max=8, init_rank=5)
+    x = jax.random.normal(jax.random.PRNGKey(1), (6, 32))
+    np.testing.assert_allclose(
+        lr_matmul(x, f), x @ materialize(f), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_rowlookup_matches_materialized(rng_key):
+    f = init_factor(rng_key, 50, 16, r_max=6)
+    idx = jnp.array([0, 3, 49, 7])
+    np.testing.assert_allclose(
+        lr_rowlookup(idx, f), materialize(f)[idx], rtol=1e-4, atol=1e-4
+    )
+
+
+def test_masks():
+    m = rank_mask(jnp.float32(3), 8)
+    assert m.tolist() == [1, 1, 1, 0, 0, 0, 0, 0]
+    am = augmented_mask(jnp.float32(2), 4)
+    assert am.tolist() == [1, 1, 0, 0, 1, 1, 0, 0]
+    S = jnp.ones((8, 8))
+    Sm = mask_coeff(S, am)
+    assert float(Sm.sum()) == 16.0  # 4x4 active entries
+
+
+def test_inactive_columns_do_not_leak(rng_key):
+    """Garbage in inactive U/V columns must not change W (S-mask invariant)."""
+    f = init_factor(rng_key, 32, 32, r_max=8, init_rank=4)
+    noise = jax.random.normal(jax.random.PRNGKey(2), f.U.shape)
+    m = rank_mask(f.rank, f.r_max)
+    U_dirty = f.U * m + noise * (1 - m)
+    f_dirty = LowRankFactor(U=U_dirty, S=f.S, V=f.V, rank=f.rank)
+    np.testing.assert_allclose(materialize(f_dirty), materialize(f), atol=1e-5)
+
+
+def test_factor_is_pytree(rng_key):
+    f = init_factor(rng_key, 16, 16, r_max=4)
+    leaves = jax.tree.leaves(f)
+    assert len(leaves) == 4  # U, S, V, rank
+    f2 = jax.tree.map(lambda x: x * 1.0, f)
+    assert isinstance(f2, LowRankFactor)
+
+
+def test_grad_through_factor(rng_key):
+    f = init_factor(rng_key, 16, 16, r_max=4)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 16))
+
+    g = jax.grad(lambda f_: jnp.sum(lr_matmul(x, f_) ** 2))(f)
+    assert g.U.shape == f.U.shape and g.S.shape == f.S.shape
+    # analytic: dL/dS = Uᵀ Gw V with Gw = xᵀ·2y
+    y = lr_matmul(x, f)
+    Gw = x.T @ (2 * y)
+    np.testing.assert_allclose(g.S, f.U.T @ Gw @ f.V, rtol=1e-3, atol=1e-3)

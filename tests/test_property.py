@@ -1,0 +1,134 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import FedConfig, fedlrt_round, init_factor, materialize
+from repro.core.dlrt import augment_basis, pick_rank, truncate
+from repro.core.factorization import augmented_mask, check_invariants, rank_mask
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _quad_loss(key, n_in, n_out):
+    """Random least-squares loss over a factorized layer."""
+    k1, k2 = jax.random.split(key)
+    X = jax.random.normal(k1, (3, 32, n_in)) / np.sqrt(n_in)
+    Y = jax.random.normal(k2, (3, 32, n_out))
+
+    def loss(f, batch):
+        pred = ((batch["x"] @ f.U) @ f.S) @ f.V.T
+        return jnp.mean((pred - batch["y"]) ** 2)
+
+    return loss, {"x": X, "y": Y}
+
+
+@settings(**SETTINGS)
+@given(
+    n_in=st.integers(12, 48),
+    n_out=st.integers(12, 48),
+    r_max=st.integers(2, 12),
+    init_rank=st.integers(1, 12),
+    seed=st.integers(0, 10_000),
+)
+def test_invariants_preserved_by_round(n_in, n_out, r_max, init_rank, seed):
+    key = jax.random.PRNGKey(seed)
+    f = init_factor(key, n_in, n_out, r_max=r_max, init_rank=init_rank)
+    loss, batch = _quad_loss(jax.random.PRNGKey(seed + 1), n_in, n_out)
+    cfg = FedConfig(num_clients=3, s_star=3, lr=1e-2, correction="simplified",
+                    tau=0.1, eval_after=False)
+    new_f, m = fedlrt_round(loss, f, batch, cfg)
+    inv = check_invariants(new_f)
+    assert float(inv["u_ortho_defect"]) < 1e-3
+    assert float(inv["v_ortho_defect"]) < 1e-3
+    assert float(inv["s_mask_violation"]) < 1e-6
+    assert 1 <= float(new_f.rank) <= new_f.r_max
+    assert all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(new_f))
+
+
+@settings(**SETTINGS)
+@given(
+    rank=st.integers(1, 8),
+    r_max=st.integers(8, 12),
+    seed=st.integers(0, 10_000),
+)
+def test_augmentation_masks_and_exactness(rank, r_max, seed):
+    key = jax.random.PRNGKey(seed)
+    f = init_factor(key, 40, 40, r_max=r_max, init_rank=rank)
+    GU = jax.random.normal(jax.random.PRNGKey(seed + 1), f.U.shape)
+    GV = jax.random.normal(jax.random.PRNGKey(seed + 2), f.V.shape)
+    aug = augment_basis(f, GU, GV)
+    # same represented matrix
+    np.testing.assert_allclose(materialize(aug), materialize(f), atol=1e-4)
+    # active set has 2·rank directions
+    am = augmented_mask(f.rank, r_max)
+    assert int(am.sum()) == 2 * min(rank, r_max)
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 10_000),
+    tau=st.floats(1e-4, 0.9),
+)
+def test_truncation_error_never_exceeds_theta(seed, tau):
+    key = jax.random.PRNGKey(seed)
+    f = init_factor(key, 32, 32, r_max=8, init_rank=8)
+    GU = jax.random.normal(jax.random.PRNGKey(seed + 1), f.U.shape)
+    GV = jax.random.normal(jax.random.PRNGKey(seed + 2), f.V.shape)
+    aug = augment_basis(f, GU, GV)
+    import dataclasses
+
+    S_star = jax.random.normal(jax.random.PRNGKey(seed + 3), aug.S.shape)
+    from repro.core.factorization import mask_coeff
+    from repro.core.dlrt import coeff_grad_mask
+
+    S_star = mask_coeff(S_star, coeff_grad_mask(aug))
+    aug = dataclasses.replace(aug, S=S_star)
+    new_f, info = truncate(aug, tau=tau)
+    err = float(jnp.linalg.norm(materialize(new_f) - materialize(aug)))
+    theta = float(info["theta"])
+    # error ≤ θ unless the r_max cap binds (then it equals the tail)
+    if float(info["rank"]) < new_f.r_max:
+        assert err <= theta * 1.01 + 1e-5
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 1000), width=st.integers(2, 16))
+def test_pick_rank_monotone_in_theta(seed, width):
+    sigma = jnp.sort(
+        jnp.abs(jax.random.normal(jax.random.PRNGKey(seed), (width,)))
+    )[::-1]
+    thetas = jnp.linspace(0.0, float(jnp.linalg.norm(sigma)) * 1.5, 8)
+    ranks = [float(pick_rank(sigma, t, r_max=width)) for t in thetas]
+    assert all(a >= b for a, b in zip(ranks, ranks[1:]))
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 10_000), c=st.integers(2, 5))
+def test_identical_clients_match_single_client(seed, c):
+    """With identical client data the correction vanishes and any client
+    count gives the same update as C=1 (linearity of aggregation)."""
+    key = jax.random.PRNGKey(seed)
+    f = init_factor(key, 24, 24, r_max=6, init_rank=6)
+    loss, batch1 = _quad_loss(jax.random.PRNGKey(seed + 1), 24, 24)
+    one = {k: v[:1] for k, v in batch1.items()}
+    rep = {k: jnp.repeat(v[:1], c, axis=0) for k, v in batch1.items()}
+    cfg1 = FedConfig(num_clients=1, s_star=3, lr=1e-2, correction="full",
+                     tau=0.1, eval_after=False)
+    cfgC = FedConfig(num_clients=c, s_star=3, lr=1e-2, correction="full",
+                     tau=0.1, eval_after=False)
+    f1, _ = fedlrt_round(loss, f, one, cfg1)
+    fC, _ = fedlrt_round(loss, f, rep, cfgC)
+    np.testing.assert_allclose(
+        materialize(f1), materialize(fC), rtol=1e-3, atol=1e-4
+    )
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 10_000))
+def test_rank_mask_shapes(seed):
+    r = jax.random.randint(jax.random.PRNGKey(seed), (5,), 0, 9).astype(jnp.float32)
+    m = rank_mask(r, 8)
+    assert m.shape == (5, 8)
+    np.testing.assert_array_equal(m.sum(-1), np.minimum(np.asarray(r), 8))
