@@ -5,6 +5,9 @@
   visible: larger τ ⇒ smaller rank ⇒ higher loss floor).
 - :func:`s_star_ablation` — local steps s* vs rounds-to-converge and drift
   (the λ ≤ 1/(12·L·s*) trade-off of Thm. 2).
+- :func:`participation_ablation` — active-cohort size k vs final loss and
+  server comm under uniform-k sampling (the standard partial-participation
+  FL regime the paper's full-participation algorithms are extended to).
 """
 from __future__ import annotations
 
@@ -14,7 +17,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import FedConfig, fedlrt_round, init_factor, materialize
-from repro.data import make_homogeneous_lsq
+from repro.data import FederatedBatcher, make_homogeneous_lsq
+from repro.fed import FederatedEngine, Participation
 
 
 def _loss(f, batch):
@@ -79,5 +83,48 @@ def s_star_ablation(emit=print):
         emit(
             f"ablation_sstar{s_star},{us:.1f},"
             f"loss={float(m['loss_before']):.3e};max_drift={drift:.3e}"
+        )
+    return out
+
+
+def participation_ablation(rounds: int = 60, C: int = 8, emit=print):
+    """Uniform-k cohort sweep on the homogeneous lsq problem.
+
+    Emits final loss and cohort-aware server comm per k — halving the
+    cohort halves per-round comm while (on the homogeneous problem)
+    convergence degrades only mildly.
+    """
+    prob = make_homogeneous_lsq(n=20, rank=4, num_points=4000, num_clients=C)
+    N = prob.px.shape[1]
+    arrays = {
+        "px": prob.px.reshape(-1, prob.px.shape[-1]),
+        "py": prob.py.reshape(-1, prob.py.shape[-1]),
+        "t": prob.target.reshape(-1),
+    }
+    parts = [list(range(c * N, (c + 1) * N)) for c in range(C)]
+    out = {}
+    for k in (C, C // 2, max(C // 4, 1)):
+        f = init_factor(
+            jax.random.PRNGKey(0), 20, 20, r_max=10, init_rank=10,
+            spectrum_scale=1.0,
+        )
+        cfg = FedConfig(num_clients=C, s_star=20, lr=0.1, correction="full",
+                        tau=0.1, eval_after=False)
+        part = (
+            None if k >= C else Participation(mode="uniform", cohort_size=k, seed=0)
+        )
+        eng = FederatedEngine(
+            lambda p, b: _loss(p, b), f, cfg, method="fedlrt", participation=part
+        )
+        batcher = FederatedBatcher(arrays, parts, batch_size=N, seed=0)
+        t0 = time.perf_counter()
+        hist = eng.train(batcher, rounds, log_every=0)
+        us = (time.perf_counter() - t0) / rounds * 1e6
+        loss = hist[-1].loss_before
+        comm = eng.comm_total_bytes()
+        out[k] = (loss, comm)
+        emit(
+            f"ablation_cohort{k}of{C},{us:.1f},"
+            f"loss={loss:.3e};comm_MB={comm/1e6:.2f}"
         )
     return out

@@ -43,18 +43,24 @@ def main() -> None:
         fig3_scaling()
         table1_measured()
     if want("cv"):
-        from benchmarks.bench_cv import fig5_proxy
+        from benchmarks.bench_cv import fig5_partial, fig5_proxy
 
         fig5_proxy(rounds=10 if q else 25, clients=(2, 4) if q else (2, 4, 8))
+        fig5_partial(rounds=10 if q else 25, C=8, cohorts=(8, 4) if q else (8, 4, 2))
     if want("kernels"):
         from benchmarks.bench_kernels import chain_vs_dense
 
         chain_vs_dense()
     if want("ablation"):
-        from benchmarks.bench_ablation import s_star_ablation, tau_ablation
+        from benchmarks.bench_ablation import (
+            participation_ablation,
+            s_star_ablation,
+            tau_ablation,
+        )
 
         tau_ablation(rounds=50 if q else 120)
         s_star_ablation()
+        participation_ablation(rounds=30 if q else 60)
     if want("roofline"):
         from benchmarks.bench_roofline import roofline_table
 

@@ -7,7 +7,14 @@ planted low-rank decision map, split non-iid (Dirichlet α=0.3) across
 clients.  Compares FeDLRT {none, simplified} against FedAvg/FedLin for
 growing client counts with s* = 240/C local steps, like the paper.
 
+All methods run through the :class:`FederatedEngine`, so per-round client
+participation is a flag away: ``--participation uniform:2`` samples a
+2-client cohort per round (comm totals then scale with the active cohort,
+not the population).
+
 Run:  PYTHONPATH=src python examples/federated_vision.py [--clients 2 4 8]
+      PYTHONPATH=src python examples/federated_vision.py \
+          --clients 8 --participation uniform:4
 """
 import argparse
 
@@ -16,9 +23,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import FedConfig, init_factor
-from repro.core.baselines import fedavg_round, fedlin_round
-from repro.core.fedlrt import fedlrt_round
-from repro.data import FederatedBatcher, make_classification_data, partition_dirichlet
+from repro.data import (
+    FederatedBatcher,
+    make_classification_data,
+    partition_dirichlet,
+    partition_sizes,
+)
+from repro.fed import FederatedEngine, Participation
 
 DIM, CLASSES, HID = 64, 10, 256
 
@@ -61,7 +72,7 @@ def accuracy(p, x, y):
     return float(jnp.mean(pred == y))
 
 
-def run(method, C, rounds, x, y, xt, yt, seed=0):
+def run(method, C, rounds, x, y, xt, yt, seed=0, participation=None, weighted=False):
     parts = partition_dirichlet(y, C, alpha=0.3, seed=seed)
     s_star = max(240 // C, 1)
     batcher = FederatedBatcher(
@@ -73,27 +84,29 @@ def run(method, C, rounds, x, y, xt, yt, seed=0):
     )
     lowrank = method.startswith("fedlrt")
     params = init_params(jax.random.PRNGKey(seed), lowrank=lowrank)
-    if method.startswith("fedlrt"):
-        rf = lambda p, b: fedlrt_round(loss_fn, p, b, cfg)
-    elif method == "fedavg":
-        rf = lambda p, b: fedavg_round(loss_fn, p, b, cfg)
-    else:
-        rf = lambda p, b: fedlin_round(loss_fn, p, b, cfg)
-    step = jax.jit(rf)
-    comm = 0.0
-    for _ in range(rounds):
-        batch = {k: jnp.asarray(v) for k, v in batcher.next_round().items()}
-        params, m = step(params, batch)
-        comm += float(m["comm_bytes_per_client"])
-    acc = accuracy(params, xt, yt)
-    rank = int(params["w1"].rank) if lowrank else "-"
-    return acc, comm, rank
+    eng = FederatedEngine(
+        loss_fn, params, cfg,
+        method="fedlrt" if lowrank else method,
+        participation=participation,
+        client_weights=partition_sizes(parts) if weighted else None,
+    )
+    hist = eng.train(batcher, rounds, log_every=0)
+    acc = accuracy(eng.params, xt, yt)
+    rank = int(eng.params["w1"].rank) if lowrank else "-"
+    mean_cohort = float(np.mean([r.cohort_size for r in hist]))
+    return acc, eng.comm_total_bytes(), rank, mean_cohort
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--clients", type=int, nargs="+", default=[2, 4, 8])
     ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument(
+        "--participation", type=str, default="full",
+        help="full | uniform:K | round_robin:K | dropout:P",
+    )
+    ap.add_argument("--weighted", action="store_true",
+                    help="client weights ∝ |X_c| in every aggregation")
     args = ap.parse_args()
 
     x, y = make_classification_data(
@@ -102,12 +115,20 @@ def main():
     xt, yt = jnp.asarray(x[-2048:]), jnp.asarray(y[-2048:])
     x, y = x[:-2048], y[:-2048]
 
+    participation = Participation.from_spec(args.participation)
+    print(f"participation={args.participation}")
     print(f"{'method':>18} | " + " | ".join(f"C={c}" for c in args.clients))
     for method in ("fedavg", "fedlin", "fedlrt:none", "fedlrt:simplified"):
         cells = []
         for C in args.clients:
-            acc, comm, rank = run(method, C, args.rounds, x, y, xt, yt)
-            cells.append(f"acc={acc:.3f} comm={comm/1e6:5.1f}MB rank={rank}")
+            acc, comm, rank, mean_cohort = run(
+                method, C, args.rounds, x, y, xt, yt,
+                participation=participation, weighted=args.weighted,
+            )
+            cells.append(
+                f"acc={acc:.3f} comm={comm/1e6:5.1f}MB "
+                f"rank={rank} cohort={mean_cohort:.1f}"
+            )
         print(f"{method:>18} | " + " | ".join(cells))
 
 

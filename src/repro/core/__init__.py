@@ -9,5 +9,21 @@ from repro.core.factorization import (  # noqa: F401
     lr_rowlookup,
     materialize,
 )
-from repro.core.fedlrt import FedConfig, fedlrt_round, make_fedlrt_step  # noqa: F401
-from repro.core.baselines import fedavg_round, fedlin_round  # noqa: F401
+from repro.core.round import (  # noqa: F401
+    FedConfig,
+    RoundContext,
+    RoundProgram,
+    local_sgd_scan,
+    make_aggregator,
+    run_round,
+    variance_correction,
+)
+from repro.core.fedlrt import FedLRTProgram, fedlrt_round, make_fedlrt_step  # noqa: F401
+from repro.core.baselines import (  # noqa: F401
+    FedAvgProgram,
+    FedLinProgram,
+    FedLRTNaiveProgram,
+    fedavg_round,
+    fedlin_round,
+    fedlrt_naive_round,
+)

@@ -1,4 +1,4 @@
-"""Baselines the paper compares against.
+"""Baselines the paper compares against, as round programs.
 
 - :func:`fedavg_round`  — Algorithm 3 (McMahan et al.).
 - :func:`fedlin_round`  — Algorithm 4 (Mitra et al.): FedAvg + variance
@@ -9,14 +9,16 @@
   FeDLRT's shared basis eliminates.  Implemented for completeness and used
   by tests/benchmarks on small layers.
 
-All round functions share the (params, client_batches) → (params, metrics)
-contract of :func:`repro.core.fedlrt.fedlrt_round` so the engine and the
-benchmarks can swap methods freely.
+Each algorithm is a :class:`repro.core.round.RoundProgram`; the module-level
+round functions are thin :func:`repro.core.round.run_round` wrappers keeping
+the ``(params, client_batches) → (params, metrics)`` contract of
+:func:`repro.core.fedlrt.fedlrt_round` so the engine and the benchmarks can
+swap methods freely.  All of them accept ``client_weights`` (weighted
+aggregation) and cohort-sized batches under partial participation.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,97 +28,122 @@ from repro.core.dlrt import qr_pos
 from repro.core.factorization import (
     AugmentedFactor,
     LowRankFactor,
-    is_factor,
     mask_coeff,
     rank_mask,
 )
-from repro.core.fedlrt import FedConfig
-from repro.optim import make_optimizer
-from repro.utils.tree import tree_mean_leading_axis
+from repro.core.round import (
+    FedConfig,
+    RoundContext,
+    first_step_batch,
+    local_sgd_scan,
+    run_round,
+    variance_correction,
+)
 
 Array = jax.Array
 LossFn = Callable[[Any, Any], Array]
 
 
-def _local_sgd(loss_fn, params0, corr_c, batches, cfg: FedConfig):
-    """s* local steps of (optionally corrected) SGD — shared by both baselines."""
-    opt = make_optimizer(cfg.optimizer, cfg.lr, momentum=cfg.momentum)
+# ---------------------------------------------------------------------------
+# Algorithms 3 and 4: dense FedAvg / FedLin
+# ---------------------------------------------------------------------------
 
-    def client(corr, batch):
-        state0 = opt.init(params0)
 
-        def step(carry, s):
-            p, ost = carry
-            b = batch
-            if cfg.per_step_batches:
-                b = jax.tree.map(
-                    lambda x: jax.lax.dynamic_index_in_dim(x, s, 0, keepdims=False),
-                    batch,
-                )
-            g = jax.grad(loss_fn)(p, b)
-            g = jax.tree.map(jnp.add, g, corr)
-            upd, ost = opt.update(g, ost, s)
-            new_p = jax.tree.map(lambda t, u: t + u.astype(t.dtype), p, upd)
-            return (new_p, ost), ()
+class _DenseProgram:
+    """Shared skeleton of the dense baselines; subclasses pick the
+    correction (none for FedAvg, control-variate for FedLin)."""
 
-        (p, _), _ = jax.lax.scan(step, (params0, state0), jnp.arange(cfg.s_star))
+    method: str = "fedavg"
+    corrected: bool = False
+
+    def broadcast(self, loss_fn: LossFn, params, client_batches, ctx: RoundContext):
+        first = first_step_batch(client_batches, ctx.cfg)
+        if self.corrected:
+            losses, g_c = ctx.vmap_c(jax.value_and_grad(loss_fn), in_axes=(None, 0))(
+                params, first
+            )
+            corr_c = variance_correction(ctx.aggregate(g_c), g_c)
+        else:
+            losses = ctx.vmap_c(loss_fn, in_axes=(None, 0))(params, first)
+            corr_c = jax.tree.map(
+                lambda t: jnp.zeros((ctx.cfg.num_clients,) + t.shape, t.dtype), params
+            )
+        shared = {
+            "params0": params,
+            "loss_before": jnp.mean(losses),
+            "first": first,
+        }
+        return shared, corr_c
+
+    def client_step(self, loss_fn, shared, corr, batches, ctx: RoundContext):
+        p, _ = local_sgd_scan(loss_fn, shared["params0"], corr, batches, ctx.cfg)
         return p
 
-    return jax.vmap(client, in_axes=(0, 0))(corr_c, batches)
+    def aggregate(self, shared, client_out, ctx: RoundContext):
+        return ctx.aggregate(client_out)
+
+    def finalize(self, loss_fn, params, shared, agg, client_batches, ctx: RoundContext):
+        new_params = agg
+        metrics = {
+            "loss_before": shared["loss_before"],
+            "comm_bytes_per_client": jnp.float32(
+                cost_model.dense_round_comm_bytes(params, self.method)
+            ),
+        }
+        if ctx.cfg.eval_after:
+            metrics["loss_after"] = jnp.mean(
+                jax.vmap(loss_fn, in_axes=(None, 0))(new_params, shared["first"])
+            )
+        return new_params, metrics
 
 
-def fedavg_round(loss_fn: LossFn, params, client_batches, cfg: FedConfig):
-    """Algorithm 3: local SGD, aggregate by averaging."""
-    first = client_batches
-    if cfg.per_step_batches:
-        first = jax.tree.map(lambda x: x[:, 0], client_batches)
-    losses = jax.vmap(loss_fn, in_axes=(None, 0))(params, first)
-    zeros = jax.tree.map(
-        lambda t: jnp.zeros((cfg.num_clients,) + t.shape, t.dtype), params
-    )
-    params_c = _local_sgd(loss_fn, params, zeros, client_batches, cfg)
-    new_params = tree_mean_leading_axis(params_c)
-    metrics = {
-        "loss_before": jnp.mean(losses),
-        "comm_bytes_per_client": jnp.float32(
-            cost_model.dense_round_comm_bytes(params, "fedavg")
-        ),
-    }
-    if cfg.eval_after:
-        metrics["loss_after"] = jnp.mean(
-            jax.vmap(loss_fn, in_axes=(None, 0))(new_params, first)
-        )
-    return new_params, metrics
+class FedAvgProgram(_DenseProgram):
+    """Algorithm 3: local SGD, aggregate by (weighted) averaging."""
+
+    method = "fedavg"
+    corrected = False
 
 
-def fedlin_round(loss_fn: LossFn, params, client_batches, cfg: FedConfig):
+class FedLinProgram(_DenseProgram):
     """Algorithm 4: FedAvg + variance correction (Eq. (4)).
 
     Effective client gradient: ∇L_c(w) − ∇L_c(wᵗ) + ∇L(wᵗ).
     """
-    first = client_batches
-    if cfg.per_step_batches:
-        first = jax.tree.map(lambda x: x[:, 0], client_batches)
-    losses, g_c = jax.vmap(jax.value_and_grad(loss_fn), in_axes=(None, 0))(
-        params, first
+
+    method = "fedlin"
+    corrected = True
+
+
+def fedavg_round(
+    loss_fn: LossFn,
+    params,
+    client_batches,
+    cfg: FedConfig,
+    *,
+    round_idx: Array | int = 0,
+    client_weights: Optional[Array] = None,
+):
+    """Algorithm 3: local SGD, aggregate by averaging."""
+    return run_round(
+        FedAvgProgram(), loss_fn, params, client_batches, cfg,
+        round_idx=round_idx, client_weights=client_weights,
     )
-    g = tree_mean_leading_axis(g_c)
-    corr_c = jax.tree.map(
-        lambda gbar, gc: jnp.broadcast_to(gbar, gc.shape) - gc, g, g_c
+
+
+def fedlin_round(
+    loss_fn: LossFn,
+    params,
+    client_batches,
+    cfg: FedConfig,
+    *,
+    round_idx: Array | int = 0,
+    client_weights: Optional[Array] = None,
+):
+    """Algorithm 4: FedAvg + variance correction (extra comm round)."""
+    return run_round(
+        FedLinProgram(), loss_fn, params, client_batches, cfg,
+        round_idx=round_idx, client_weights=client_weights,
     )
-    params_c = _local_sgd(loss_fn, params, corr_c, client_batches, cfg)
-    new_params = tree_mean_leading_axis(params_c)
-    metrics = {
-        "loss_before": jnp.mean(losses),
-        "comm_bytes_per_client": jnp.float32(
-            cost_model.dense_round_comm_bytes(params, "fedlin")
-        ),
-    }
-    if cfg.eval_after:
-        metrics["loss_after"] = jnp.mean(
-            jax.vmap(loss_fn, in_axes=(None, 0))(new_params, first)
-        )
-    return new_params, metrics
 
 
 # ---------------------------------------------------------------------------
@@ -153,58 +180,74 @@ def _naive_client_round(loss_fn, f: LowRankFactor, batch, cfg: FedConfig):
     return U_t, S_c, V_t
 
 
-def fedlrt_naive_round(
-    loss_fn: Callable[[LowRankFactor, Any], Array],
-    f: LowRankFactor,
-    client_batches,
-    cfg: FedConfig,
-):
+class FedLRTNaiveProgram:
     """Algorithm 6 on a single factorized layer (the paper's setting).
 
     Per-client bases diverge, so the server must reconstruct
     ``W* = mean_c Ũ_c S̃_c Ṽ_cᵀ`` and run a full ``n×n`` SVD — the cost this
     paper's shared basis removes (Table 1 rows FeDLR / Riemannian FL).
     """
-    U_c, S_c, V_c = jax.vmap(
-        lambda b: _naive_client_round(loss_fn, f, b, cfg)
-    )(client_batches)
-    W_star = jnp.mean(jnp.einsum("cik,ckl,cjl->cij", U_c, S_c, V_c), axis=0)
-    P, sigma, Qt = jnp.linalg.svd(W_star, full_matrices=False)
-    r_max = f.r_max
-    tail = jnp.cumsum(jnp.square(sigma[::-1]))[::-1]
-    theta = cfg.tau * jnp.linalg.norm(sigma)
-    ok = tail < jnp.square(theta)
-    r1 = jnp.clip(jnp.where(jnp.any(ok), jnp.argmax(ok), sigma.shape[0]), 1, r_max)
-    keep = rank_mask(r1.astype(jnp.float32), r_max)
-    new_f = LowRankFactor(
-        U=P[:, :r_max],
-        S=jnp.diag(sigma[:r_max] * keep),
-        V=Qt[:r_max, :].T,
-        rank=r1.astype(jnp.float32),
-    )
-    losses = jax.vmap(lambda b: loss_fn(f, b))(client_batches)
-    metrics = {
-        "loss_before": jnp.mean(losses),
-        "rank": new_f.rank,
-        # Alg. 6 communicates both augmented bases and coefficients per client
-        "comm_bytes_per_client": jnp.float32(
-            4
-            * (
-                (f.n_in + f.n_out) * 2 * f.r_max
-                + (2 * f.r_max) ** 2
-                + (f.n_in + f.n_out) * f.r_max
-                + f.r_max**2
-            )
-        ),
-    }
-    if cfg.eval_after:
-        metrics["loss_after"] = jnp.mean(
-            jax.vmap(lambda b: loss_fn(new_f, b))(client_batches)
+
+    def broadcast(self, loss_fn, f: LowRankFactor, client_batches, ctx: RoundContext):
+        losses = ctx.vmap_c(lambda b: loss_fn(f, b))(client_batches)
+        return {"f": f, "loss_before": jnp.mean(losses)}, None
+
+    def client_step(self, loss_fn, shared, _pc, batch, ctx: RoundContext):
+        return _naive_client_round(loss_fn, shared["f"], batch, ctx.cfg)
+
+    def aggregate(self, shared, client_out, ctx: RoundContext):
+        U_c, S_c, V_c = client_out
+        return ctx.aggregate(jnp.einsum("cik,ckl,cjl->cij", U_c, S_c, V_c))
+
+    def finalize(self, loss_fn, f, shared, W_star, client_batches, ctx: RoundContext):
+        cfg = ctx.cfg
+        P, sigma, Qt = jnp.linalg.svd(W_star, full_matrices=False)
+        r_max = f.r_max
+        tail = jnp.cumsum(jnp.square(sigma[::-1]))[::-1]
+        theta = cfg.tau * jnp.linalg.norm(sigma)
+        ok = tail < jnp.square(theta)
+        r1 = jnp.clip(
+            jnp.where(jnp.any(ok), jnp.argmax(ok), sigma.shape[0]), 1, r_max
         )
-    return new_f, metrics
+        keep = rank_mask(r1.astype(jnp.float32), r_max)
+        new_f = LowRankFactor(
+            U=P[:, :r_max],
+            S=jnp.diag(sigma[:r_max] * keep),
+            V=Qt[:r_max, :].T,
+            rank=r1.astype(jnp.float32),
+        )
+        metrics = {
+            "loss_before": shared["loss_before"],
+            "rank": new_f.rank,
+            # Alg. 6 communicates both augmented bases and coefficients per client
+            "comm_bytes_per_client": jnp.float32(
+                4
+                * (
+                    (f.n_in + f.n_out) * 2 * f.r_max
+                    + (2 * f.r_max) ** 2
+                    + (f.n_in + f.n_out) * f.r_max
+                    + f.r_max**2
+                )
+            ),
+        }
+        if cfg.eval_after:
+            metrics["loss_after"] = jnp.mean(
+                jax.vmap(lambda b: loss_fn(new_f, b))(client_batches)
+            )
+        return new_f, metrics
 
 
-ROUND_FNS = {
-    "fedavg": fedavg_round,
-    "fedlin": fedlin_round,
-}
+def fedlrt_naive_round(
+    loss_fn: Callable[[LowRankFactor, Any], Array],
+    f: LowRankFactor,
+    client_batches,
+    cfg: FedConfig,
+    *,
+    round_idx: Array | int = 0,
+    client_weights: Optional[Array] = None,
+):
+    """Algorithm 6 round — thin :func:`run_round` wrapper."""
+    return run_round(
+        FedLRTNaiveProgram(), loss_fn, f, client_batches, cfg,
+        round_idx=round_idx, client_weights=client_weights,
+    )

@@ -143,6 +143,23 @@ def dense_round_comm_bytes(params, method: str = "fedlin") -> int:
     return mult * sum(x.size for x in jax.tree.leaves(params)) * BYTES
 
 
+def round_total_comm_bytes(
+    params, method: str = "fedlrt", *, correction: str = "simplified",
+    cohort_size: int,
+) -> int:
+    """Total server-side on-wire bytes of one round.
+
+    Per-client volumes are participation-independent, but the server's
+    aggregate traffic scales with the *active cohort* — under uniform-k
+    sampling a round costs ``k/C`` of the full-participation round.
+    """
+    if method.startswith("fedlrt"):
+        per_client = fedlrt_round_comm_bytes(params, correction)
+    else:
+        per_client = dense_round_comm_bytes(params, method)
+    return per_client * cohort_size
+
+
 def client_flops_per_local_step(params, batch_tokens: int) -> float:
     """Forward+backward matmul FLOPs of the factor leaves per local step.
 

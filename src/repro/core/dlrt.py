@@ -56,6 +56,13 @@ def _ortho_complement_cholqr2(U: Array, G: Array, eps: float = 1e-7, spec=None) 
     Rank-deficient columns surface as junk-but-masked directions (the
     coefficient mask keeps them inert, and the truncation SVD's rotation
     is supported on the active block only — see factorization.py docstring).
+
+    Severely rank-deficient blocks (e.g. MoE expert factors whose expert
+    saw almost no routed tokens, so ``G`` spans far fewer than r
+    directions) can drive the Cholesky to a non-PD matrix and emit
+    non-finite columns; those are zeroed — a zero basis column is exactly
+    inert (contributes nothing to ``Ũ S̃ Ṽᵀ``), whereas a NaN one poisons
+    the whole factor through the client loss.
     """
     def pin(Q):
         # keep the row (feature) dim sharded: every matmul here contracts
@@ -81,7 +88,10 @@ def _ortho_complement_cholqr2(U: Array, G: Array, eps: float = 1e-7, spec=None) 
         )
         return pin(Q @ jnp.swapaxes(L_inv, -1, -2))
 
-    return once(once(G))
+    def finite(Q):
+        return jnp.where(jnp.isfinite(Q), Q, 0.0)
+
+    return finite(once(finite(once(G))))
 
 
 def augment_basis(

@@ -1,7 +1,9 @@
 """FeDLRT: one federated aggregation round (paper Algorithms 1 and 5).
 
-The round function is *generic over a parameter pytree* whose leaves are
-either :class:`LowRankFactor` (FeDLRT-managed weight matrices) or plain
+The round is expressed as a :class:`repro.core.round.RoundProgram` — the
+four-phase skeleton (broadcast / client_step / aggregate / finalize) shared
+with the baselines — and is *generic over a parameter pytree* whose leaves
+are either :class:`LowRankFactor` (FeDLRT-managed weight matrices) or plain
 arrays (norm scales, biases, anything not factorized — these receive
 FedLin-style full aggregation, which is cheap since they are O(n) objects).
 
@@ -9,7 +11,8 @@ Federation model
 ----------------
 Clients are an explicit leading axis ``C`` on the batch pytree.  All
 client-parallel work is expressed with ``jax.vmap`` over that axis and all
-server aggregation with a mean over it.  This gives one implementation that
+server aggregation with a (weighted) mean over it.  This gives one
+implementation that
 
 - runs as a plain single-device simulation on CPU (tests, examples), and
 - under ``jit`` with the client axis sharded over the mesh's
@@ -19,23 +22,29 @@ server aggregation with a mean over it.  This gives one implementation that
   gradients, O(r²) for coefficients) — this is how the communication claim
   is made visible to the roofline analysis.
 
-Round structure (Alg. 1 / Alg. 5):
-  1. broadcast {U,V,S}           → implicit (replicated params)
-  2. client basis gradients      → ``vmap(grad(loss))`` at shared params
-     server aggregate            → mean over C            [comm: 2nr (+r²)]
-  3. server basis augmentation   → QR (dlrt.augment_basis)
-     broadcast {Ū,V̄}            → implicit               [comm: 2nr]
-  4. (full v/c only) aggregate augmented coefficient gradients  [comm: 4r²×2]
-  5. client coefficient loop     → ``lax.scan`` of s* masked-SGD steps on S̃
-  6. aggregate S̃* = mean_c S̃_c  → Eq. (10)               [comm: 4r²]
-  7. truncation (2r×2r SVD)      → automatic compression
+``C`` is the *active cohort* of the round: under partial participation
+(:mod:`repro.fed.participation`) the engine hands the round only the
+sampled clients' batches and a matching ``FedConfig.num_clients``.
+
+Round structure (Alg. 1 / Alg. 5) mapped onto the phases:
+  broadcast:
+    1. broadcast {U,V,S}           → implicit (replicated params)
+    2. client basis gradients      → ``vmap(grad(loss))`` at shared params
+       server aggregate            → mean over C            [comm: 2nr (+r²)]
+    3. server basis augmentation   → QR (dlrt.augment_basis)
+       broadcast {Ū,V̄}            → implicit               [comm: 2nr]
+    4. (full v/c only) aggregate augmented coefficient gradients  [comm: 4r²×2]
+  client_step:
+    5. client coefficient loop     → ``lax.scan`` of s* masked-SGD steps on S̃
+  aggregate:
+    6. aggregate S̃* = mean_c S̃_c  → Eq. (10)               [comm: 4r²]
+  finalize:
+    7. truncation (2r×2r SVD)      → automatic compression
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from functools import partial
-from typing import Any, Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -48,38 +57,21 @@ from repro.core.factorization import (
     is_factor,
     mask_coeff,
 )
-from repro.optim import make_optimizer
+from repro.core.round import (
+    FedConfig,
+    LossFn,
+    RoundContext,
+    first_step_batch,
+    last_step_batch,
+    local_sgd_scan,
+    run_round,
+    variance_correction,
+)
 from repro.utils import meshctx
-from repro.utils.tree import tree_mean_leading_axis
+
+__all__ = ["FedConfig", "FedLRTProgram", "fedlrt_round", "make_fedlrt_step"]
 
 Array = jax.Array
-LossFn = Callable[[Any, Any], Array]  # (params, batch) -> scalar
-
-
-@dataclasses.dataclass(frozen=True)
-class FedConfig:
-    """Hyperparameters of one federated optimization run."""
-
-    num_clients: int
-    s_star: int  # local iterations per round
-    lr: float = 1e-3
-    correction: str = "simplified"  # "none" | "simplified" | "full"
-    tau: float = 0.01  # relative singular-value truncation threshold
-    optimizer: str = "sgd"
-    momentum: float = 0.0
-    per_step_batches: bool = False  # batch leaves have a (C, s*, ...) layout
-    eval_after: bool = True  # compute global loss after the round (extra fwd)
-    track_drift: bool = False  # record max_s ‖S̃_c^s − S̃‖ (Theorem-1 diagnostics)
-    # replicate the augmented bases for the client loop (hypothesis Q3 in
-    # EXPERIMENTS.md §Perf: gather-once beats per-step gathers).  REFUTED on
-    # qwen2 train_4k — XLA already hoists the per-step gathers out of the
-    # scan, so forced replication only added resharding traffic (+75% on
-    # the collective term) and +4.5 GiB temp.  Kept as a switch.
-    replicate_augmented: bool = False
-
-    def __post_init__(self):
-        if self.correction not in ("none", "simplified", "full"):
-            raise ValueError(f"bad correction {self.correction!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -117,16 +109,41 @@ def _mask_coeff_grads(aug_params, grads):
     return _map_params(one, aug_params, grads)
 
 
-# ---------------------------------------------------------------------------
-# the round
-# ---------------------------------------------------------------------------
+def _mask_trainable(aug_params, trainable):
+    def one(x, t):
+        if is_factor(x):
+            return mask_coeff(t, coeff_grad_mask(x))
+        return t
+
+    return _map_params(one, aug_params, trainable)
 
 
-def _client_batch(batches, s: Array, cfg: FedConfig):
-    """Select the batch for local step ``s`` (vmapped over clients upstream)."""
-    if cfg.per_step_batches:
-        return jax.tree.map(lambda x: jax.lax.dynamic_index_in_dim(x, s, 0, keepdims=False), batches)
-    return batches
+def _coeff_drift(aug_params, trainable, trainable0):
+    """‖S̃ − S̃⁰‖ over factor-coefficient leaves only."""
+    sq = jnp.zeros(())
+    pairs = jax.tree.leaves(
+        _map_params(
+            lambda x, a, b: (is_factor(x), a, b), aug_params, trainable, trainable0
+        ),
+        is_leaf=lambda t: isinstance(t, tuple),
+    )
+    for isf, a, b in pairs:
+        if isf:
+            sq = sq + jnp.sum(jnp.square((a - b).astype(jnp.float32)))
+    return jnp.sqrt(sq)
+
+
+def _coeff_grad_norm(params, g_global):
+    """‖∇_S L‖ over all factor leaves (enters Thm. 1/2 diagnostics)."""
+    sq = jnp.zeros(())
+    leaves = jax.tree.leaves(
+        _map_params(lambda p, g: (p, g), params, g_global),
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+    for p, g in leaves:
+        if isinstance(p, LowRankFactor):
+            sq = sq + jnp.sum(jnp.square(g.S.astype(jnp.float32)))
+    return jnp.sqrt(sq)
 
 
 def _constrain_factor(x, spec):
@@ -147,6 +164,182 @@ def _constrain_factor(x, spec):
     )
 
 
+def _constrain_clientwise(tree, ctx: RoundContext):
+    """Pin (C, …) per-client pytrees to P(client_axes, *param_spec)."""
+    if ctx.spec_tree is None or ctx.client_axes is None:
+        return tree
+    import jax.sharding as jsh
+
+    def one(g, s):
+        def leafc(gl, sl):
+            return meshctx.constrain(gl, jsh.PartitionSpec(ctx.client_axes, *sl))
+
+        if is_factor(g):
+            return jax.tree.map(leafc, g, s)
+        return leafc(g, s)
+
+    return _map_params(one, tree, ctx.spec_tree)
+
+
+# ---------------------------------------------------------------------------
+# the round program
+# ---------------------------------------------------------------------------
+
+
+class FedLRTProgram:
+    """Algorithms 1 (full correction) / 5 (simplified) as a round program."""
+
+    def broadcast(self, loss_fn: LossFn, params, client_batches, ctx: RoundContext):
+        cfg = ctx.cfg
+        first_batch = first_step_batch(client_batches, cfg)
+
+        # -- 1/2: client basis (and coefficient) gradients at the shared point
+        losses, per_client_g = ctx.vmap_c(
+            jax.value_and_grad(loss_fn), in_axes=(None, 0)
+        )(params, first_batch)
+        per_client_g = _constrain_clientwise(per_client_g, ctx)
+        loss_before = jnp.mean(losses)
+        g_global = ctx.aggregate(per_client_g)  # server aggregate
+
+        # -- 3: server-side basis augmentation (QR), Lemma-1 S̃ assembly -----
+        def _augment(p, g, spec=None):
+            if isinstance(p, LowRankFactor):
+                u_spec = spec.U if spec is not None and is_factor(spec) else None
+                v_spec = spec.V if spec is not None and is_factor(spec) else None
+                return augment_basis(p, g.U, g.V, u_spec=u_spec, v_spec=v_spec)
+            return p  # dense leaf: untouched here
+
+        if ctx.spec_tree is not None:
+            aug_params = _map_params(_augment, params, g_global, ctx.spec_tree)
+        else:
+            aug_params = _map_params(_augment, params, g_global)
+        if ctx.spec_tree is not None:
+            if cfg.replicate_augmented:
+                import jax.sharding as jsh
+
+                repl = jax.tree.map(
+                    lambda s: jsh.PartitionSpec(), ctx.spec_tree,
+                    is_leaf=lambda x: isinstance(x, jsh.PartitionSpec),
+                )
+                aug_params = _map_params(_constrain_factor, aug_params, repl)
+            else:
+                aug_params = _map_params(_constrain_factor, aug_params, ctx.spec_tree)
+
+        trainable0 = trainable_of(aug_params)
+        local_loss = self._local_loss(loss_fn, aug_params)
+
+        # -- 4: variance correction term per client -------------------------
+        # corr_c enters the update as: S̃ ← S̃ − λ(∇L_c(S̃_c) + corr_c),
+        # corr_c = G_S̃ − G_S̃,c  (global minus own; paper Eq. (8)).
+        if cfg.correction == "full":
+            # extra communication round: aggregate ∇_S̃ L_c at the augmented point
+            g0_c = ctx.vmap_c(jax.grad(local_loss), in_axes=(None, 0))(
+                trainable0, first_batch
+            )
+            corr_c = variance_correction(ctx.aggregate(g0_c), g0_c)
+        elif cfg.correction == "simplified":
+            # reuse the round-1 gradients: pad ∇_S L into the top-left block
+            # (Eq. (9)); dense leaves get the FedLin correction from the same
+            # round-1 gradients — no extra communication.
+            def simpl(p, gbar, gc):
+                if isinstance(p, LowRankFactor):
+                    r_max = p.r_max
+                    # gc.S: (C, ..., r_max, r_max) — batched (stacked-layer) safe
+                    block = jnp.zeros(
+                        gc.S.shape[:-2] + (2 * r_max, 2 * r_max), gc.S.dtype
+                    )
+                    block = block.at[..., :r_max, :r_max].set(gbar.S[None] - gc.S)
+                    return block
+                return jnp.broadcast_to(gbar, gc.shape) - gc
+
+            corr_c = jax.tree.map(
+                simpl, params, g_global, per_client_g, is_leaf=is_factor
+            )
+        else:  # "none"
+            corr_c = jax.tree.map(
+                lambda t: jnp.zeros((cfg.num_clients,) + t.shape, t.dtype), trainable0
+            )
+
+        shared = {
+            "aug_params": aug_params,
+            "trainable0": trainable0,
+            "g_global": g_global,
+            "loss_before": loss_before,
+        }
+        return shared, corr_c
+
+    @staticmethod
+    def _local_loss(loss_fn, aug_params):
+        def local_loss(trainable, batch):
+            return loss_fn(merge_trainable(aug_params, trainable), batch)
+
+        return local_loss
+
+    def client_step(self, loss_fn, shared, corr, batches, ctx: RoundContext):
+        # -- 5: client coefficient optimization (s* local steps) ------------
+        cfg = ctx.cfg
+        aug_params, trainable0 = shared["aug_params"], shared["trainable0"]
+        drift_fn = (
+            (lambda tr: _coeff_drift(aug_params, tr, trainable0))
+            if cfg.track_drift
+            else None
+        )
+        return local_sgd_scan(
+            self._local_loss(loss_fn, aug_params),
+            trainable0,
+            corr,
+            batches,
+            cfg,
+            transform_grads=lambda g: _mask_coeff_grads(aug_params, g),
+            # keep the zero-padding invariant exact under momentum etc.
+            project=lambda tr: _mask_trainable(aug_params, tr),
+            drift_fn=drift_fn,
+        )
+
+    def aggregate(self, shared, client_out, ctx: RoundContext):
+        # -- 6: aggregation  S̃* = mean_c S̃_c^{s*}  (Eq. (10)) ---------------
+        trainable_c, drift_c = client_out
+        return ctx.aggregate(trainable_c), drift_c
+
+    def finalize(self, loss_fn, params, shared, agg, client_batches, ctx: RoundContext):
+        # -- 7: truncation (automatic compression) --------------------------
+        cfg = ctx.cfg
+        trainable_star, drift_c = agg
+        merged = merge_trainable(shared["aug_params"], trainable_star)
+
+        infos = {}
+
+        def _truncate(path, x):
+            if isinstance(x, AugmentedFactor):
+                new_f, info = truncate(x, tau=cfg.tau)
+                infos[jax.tree_util.keystr(path)] = info
+                return new_f
+            return x
+
+        new_params = jax.tree_util.tree_map_with_path(
+            _truncate, merged, is_leaf=is_factor
+        )
+        if ctx.spec_tree is not None:
+            new_params = _map_params(_constrain_factor, new_params, ctx.spec_tree)
+
+        metrics = {
+            "loss_before": shared["loss_before"],
+            "rank": {k: v["rank"] for k, v in infos.items()},
+            "trunc_err": {k: v["trunc_err"] for k, v in infos.items()},
+            "grad_norm_S": _coeff_grad_norm(params, shared["g_global"]),
+            "comm_bytes_per_client": jnp.float32(
+                cost_model.fedlrt_round_comm_bytes(params, cfg.correction)
+            ),
+        }
+        if cfg.track_drift:
+            metrics["max_coeff_drift"] = jnp.max(drift_c)
+        if cfg.eval_after:
+            last_batch = last_step_batch(client_batches, cfg)
+            losses_after = jax.vmap(loss_fn, in_axes=(None, 0))(new_params, last_batch)
+            metrics["loss_after"] = jnp.mean(losses_after)
+        return new_params, metrics
+
+
 def fedlrt_round(
     loss_fn: LossFn,
     params,
@@ -159,6 +352,10 @@ def fedlrt_round(
     client_weights: Optional[Array] = None,
 ):
     """One full FeDLRT aggregation round.  Returns ``(new_params, metrics)``.
+
+    Thin wrapper over :func:`repro.core.round.run_round` with
+    :class:`FedLRTProgram` — kept as the stable
+    ``(params, client_batches) → (params, metrics)`` entry point.
 
     ``client_batches`` leaves carry a leading client axis ``C``
     (``(C, s*, ...)`` if ``cfg.per_step_batches``).  ``spec_tree`` (optional,
@@ -173,228 +370,23 @@ def fedlrt_round(
     to every ``aggregate`` (basis gradients, correction gradients,
     coefficients); normalized internally.
     """
-    C = cfg.num_clients
-    round_idx = jnp.asarray(round_idx)
-    if client_weights is not None:
-        w = jnp.asarray(client_weights, jnp.float32)
-        w = w / jnp.sum(w)
-
-        def aggregate(tree):
-            return jax.tree.map(
-                lambda x: jnp.tensordot(
-                    w.astype(jnp.float32), x.astype(jnp.float32), axes=1
-                ).astype(x.dtype),
-                tree,
-            )
-    else:
-        aggregate = tree_mean_leading_axis
-
-    def _constrain_clientwise(tree):
-        """Pin (C, …) per-client pytrees to P(client_axes, *param_spec)."""
-        if spec_tree is None or client_axes is None:
-            return tree
-        import jax.sharding as jsh
-
-        def one(g, s):
-            def leafc(gl, sl):
-                return meshctx.constrain(gl, jsh.PartitionSpec(client_axes, *sl))
-
-            if is_factor(g):
-                return jax.tree.map(leafc, g, s)
-            return leafc(g, s)
-
-        return _map_params(one, tree, spec_tree)
-
-    # -- 1/2: client basis (and coefficient) gradients at the shared point --
-    loss_and_grad = jax.value_and_grad(loss_fn)
-    first_batch = client_batches
-    if cfg.per_step_batches:
-        first_batch = jax.tree.map(lambda x: x[:, 0], client_batches)
-    vmap_c = (
-        functools.partial(jax.vmap, spmd_axis_name=client_axes)
-        if client_axes
-        else jax.vmap
+    return run_round(
+        FedLRTProgram(),
+        loss_fn,
+        params,
+        client_batches,
+        cfg,
+        round_idx=round_idx,
+        client_weights=client_weights,
+        spec_tree=spec_tree,
+        client_axes=client_axes,
     )
-    losses, per_client_g = vmap_c(loss_and_grad, in_axes=(None, 0))(
-        params, first_batch
-    )
-    per_client_g = _constrain_clientwise(per_client_g)
-    loss_before = jnp.mean(losses)
-    g_global = aggregate(per_client_g)  # server aggregate
-
-    # -- 3: server-side basis augmentation (QR), Lemma-1 S̃ assembly ---------
-    def _augment(p, g, spec=None):
-        if isinstance(p, LowRankFactor):
-            u_spec = spec.U if spec is not None and is_factor(spec) else None
-            v_spec = spec.V if spec is not None and is_factor(spec) else None
-            return augment_basis(p, g.U, g.V, u_spec=u_spec, v_spec=v_spec)
-        return p  # dense leaf: untouched here
-
-    if spec_tree is not None:
-        aug_params = _map_params(_augment, params, g_global, spec_tree)
-    else:
-        aug_params = _map_params(_augment, params, g_global)
-    if spec_tree is not None:
-        if cfg.replicate_augmented:
-            import jax.sharding as jsh
-
-            repl = jax.tree.map(
-                lambda s: jsh.PartitionSpec(), spec_tree,
-                is_leaf=lambda x: isinstance(x, jsh.PartitionSpec),
-            )
-            aug_params = _map_params(_constrain_factor, aug_params, repl)
-        else:
-            aug_params = _map_params(_constrain_factor, aug_params, spec_tree)
-
-    # local (per-client) loss on the trainable view
-    def local_loss(trainable, batch):
-        return loss_fn(merge_trainable(aug_params, trainable), batch)
-
-    trainable0 = trainable_of(aug_params)
-
-    # -- 4: variance correction term per client ----------------------------
-    # corr_c enters the update as: S̃ ← S̃ − λ(∇L_c(S̃_c) + corr_c),
-    # corr_c = G_S̃ − G_S̃,c  (global minus own; paper Eq. (8)).
-    if cfg.correction == "full":
-        # extra communication round: aggregate ∇_S̃ L_c at the augmented point
-        g0_c = vmap_c(jax.grad(local_loss), in_axes=(None, 0))(
-            trainable0, first_batch
-        )
-        g0 = aggregate(g0_c)
-        # broadcast the aggregated gradient over the client axis
-        corr_c = jax.tree.map(
-            lambda gbar, gc: jnp.broadcast_to(gbar, gc.shape) - gc, g0, g0_c
-        )
-    elif cfg.correction == "simplified":
-        # reuse the round-1 gradients: pad ∇_S L into the top-left block
-        # (Eq. (9)); dense leaves get the FedLin correction from the same
-        # round-1 gradients — no extra communication.
-        def simpl(p, gbar, gc):
-            if isinstance(p, LowRankFactor):
-                r_max = p.r_max
-                # gc.S: (C, ..., r_max, r_max) — batched (stacked-layer) safe
-                block = jnp.zeros(
-                    gc.S.shape[:-2] + (2 * r_max, 2 * r_max), gc.S.dtype
-                )
-                block = block.at[..., :r_max, :r_max].set(gbar.S[None] - gc.S)
-                return block
-            return jnp.broadcast_to(gbar, gc.shape) - gc
-
-        corr_c = jax.tree.map(
-            simpl, params, g_global, per_client_g, is_leaf=is_factor
-        )
-    else:  # "none"
-        corr_c = jax.tree.map(
-            lambda t: jnp.zeros((C,) + t.shape, t.dtype), trainable0
-        )
-
-    # -- 5: client coefficient optimization (s* local steps) ---------------
-    opt = make_optimizer(cfg.optimizer, cfg.lr, momentum=cfg.momentum)
-
-    def _coeff_drift(tr):
-        """‖S̃ − S̃⁰‖ over factor-coefficient leaves only."""
-        sq = jnp.zeros(())
-        pairs = jax.tree.leaves(
-            _map_params(lambda x, a, b: (is_factor(x), a, b), aug_params, tr, trainable0),
-            is_leaf=lambda t: isinstance(t, tuple),
-        )
-        for isf, a, b in pairs:
-            if isf:
-                sq = sq + jnp.sum(jnp.square((a - b).astype(jnp.float32)))
-        return jnp.sqrt(sq)
-
-    def client_update(corr, batches):
-        state0 = opt.init(trainable0)
-
-        def step(carry, s):
-            tr, ost, drift = carry
-            b = _client_batch(batches, s, cfg)
-            g = jax.grad(local_loss)(tr, b)
-            g = jax.tree.map(jnp.add, g, corr)
-            g = _mask_coeff_grads(aug_params, g)
-            upd, ost = opt.update(g, ost, s)
-            # cast: f32 lr × bf16 grad promotes; carry dtype must be stable
-            tr = jax.tree.map(lambda t, u: t + u.astype(t.dtype), tr, upd)
-            # keep the zero-padding invariant exact under momentum etc.
-            tr = _mask_trainable(aug_params, tr)
-            if cfg.track_drift:
-                drift = jnp.maximum(drift, _coeff_drift(tr))
-            return (tr, ost, drift), ()
-
-        (tr, _, drift), _ = jax.lax.scan(
-            step, (trainable0, state0, jnp.zeros(())), jnp.arange(cfg.s_star)
-        )
-        return tr, drift
-
-    trainable_c, drift_c = vmap_c(client_update, in_axes=(0, 0))(
-        corr_c, client_batches
-    )
-
-    # -- 6: aggregation  S̃* = mean_c S̃_c^{s*}  (Eq. (10)) ------------------
-    trainable_star = aggregate(trainable_c)
-
-    # -- 7: truncation (automatic compression) -----------------------------
-    merged = merge_trainable(aug_params, trainable_star)
-
-    infos = {}
-
-    def _truncate(path, x):
-        if isinstance(x, AugmentedFactor):
-            new_f, info = truncate(x, tau=cfg.tau)
-            infos[jax.tree_util.keystr(path)] = info
-            return new_f
-        return x
-
-    new_params = jax.tree_util.tree_map_with_path(_truncate, merged, is_leaf=is_factor)
-    if spec_tree is not None:
-        new_params = _map_params(_constrain_factor, new_params, spec_tree)
-
-    metrics = {
-        "loss_before": loss_before,
-        "rank": {k: v["rank"] for k, v in infos.items()},
-        "trunc_err": {k: v["trunc_err"] for k, v in infos.items()},
-        "grad_norm_S": _coeff_grad_norm(params, g_global),
-        "comm_bytes_per_client": jnp.float32(
-            cost_model.fedlrt_round_comm_bytes(params, cfg.correction)
-        ),
-    }
-    if cfg.track_drift:
-        metrics["max_coeff_drift"] = jnp.max(drift_c)
-    if cfg.eval_after:
-        last_batch = client_batches
-        if cfg.per_step_batches:
-            last_batch = jax.tree.map(lambda x: x[:, -1], client_batches)
-        losses_after = jax.vmap(loss_fn, in_axes=(None, 0))(new_params, last_batch)
-        metrics["loss_after"] = jnp.mean(losses_after)
-    return new_params, metrics
-
-
-def _mask_trainable(aug_params, trainable):
-    def one(x, t):
-        if is_factor(x):
-            return mask_coeff(t, coeff_grad_mask(x))
-        return t
-
-    return _map_params(one, aug_params, trainable)
-
-
-def _coeff_grad_norm(params, g_global):
-    """‖∇_S L‖ over all factor leaves (enters Thm. 1/2 diagnostics)."""
-    sq = jnp.zeros(())
-    leaves = jax.tree.leaves(
-        _map_params(lambda p, g: (p, g), params, g_global),
-        is_leaf=lambda x: isinstance(x, tuple),
-    )
-    for p, g in leaves:
-        if isinstance(p, LowRankFactor):
-            sq = sq + jnp.sum(jnp.square(g.S.astype(jnp.float32)))
-    return jnp.sqrt(sq)
 
 
 def make_fedlrt_step(loss_fn: LossFn, cfg: FedConfig):
     """jit-ready ``(params, client_batches, round_idx) → (params, metrics)``."""
 
-    @partial(jax.jit, static_argnums=())
+    @jax.jit
     def step(params, client_batches, round_idx):
         return fedlrt_round(loss_fn, params, client_batches, cfg, round_idx=round_idx)
 

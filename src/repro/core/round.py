@@ -1,0 +1,266 @@
+"""Round programs: the shared skeleton of every federated aggregation round.
+
+The paper's Algorithms 1–6 (FeDLRT full/simplified, FedAvg, FedLin, naive
+per-client low-rank) all instantiate the same four-phase round::
+
+    broadcast   server-side prep at the shared point: global gradients,
+                basis augmentation, per-client correction terms
+    client_step one client's local work (vmapped over the cohort axis by
+                the runner — jit/GSPMD friendly, no host loop)
+    aggregate   server reduction over the cohort (weighted mean → under a
+                sharded client axis this lowers to the paper's all-reduce)
+    finalize    truncation / metric assembly on the aggregated state
+
+:func:`run_round` executes any :class:`RoundProgram` through that skeleton.
+The phases communicate through plain pytrees; everything cohort-shaped
+carries a leading client axis ``C`` (the *active cohort*, which under
+partial participation is smaller than the population — see
+:mod:`repro.fed.participation`).
+
+Shared building blocks that used to be duplicated per algorithm live here:
+:func:`local_sgd_scan` (the s*-step client loop as one ``lax.scan``) and
+:func:`variance_correction` (the FedLin/FeDLRT control-variate term).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import make_optimizer
+from repro.utils.tree import tree_mean_leading_axis
+
+Array = jax.Array
+LossFn = Callable[[Any, Any], Array]  # (params, batch) -> scalar
+
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    """Hyperparameters of one federated optimization run.
+
+    ``num_clients`` is the size of the *active cohort* a round function
+    sees — with partial participation the engine rebuilds the config per
+    cohort size (jit caches one executable per size).
+    """
+
+    num_clients: int
+    s_star: int  # local iterations per round
+    lr: float = 1e-3
+    correction: str = "simplified"  # "none" | "simplified" | "full"
+    tau: float = 0.01  # relative singular-value truncation threshold
+    optimizer: str = "sgd"
+    momentum: float = 0.0
+    per_step_batches: bool = False  # batch leaves have a (C, s*, ...) layout
+    eval_after: bool = True  # compute global loss after the round (extra fwd)
+    track_drift: bool = False  # record max_s ‖S̃_c^s − S̃‖ (Theorem-1 diagnostics)
+    # replicate the augmented bases for the client loop (hypothesis Q3 in
+    # EXPERIMENTS.md §Perf: gather-once beats per-step gathers).  REFUTED on
+    # qwen2 train_4k — XLA already hoists the per-step gathers out of the
+    # scan, so forced replication only added resharding traffic (+75% on
+    # the collective term) and +4.5 GiB temp.  Kept as a switch.
+    replicate_augmented: bool = False
+
+    def __post_init__(self):
+        if self.correction not in ("none", "simplified", "full"):
+            raise ValueError(f"bad correction {self.correction!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundContext:
+    """Everything a phase needs beyond its own pytrees.
+
+    ``aggregate`` reduces a leading-client-axis pytree to the server value
+    (plain or ``client_weights``-weighted mean); ``vmap_c`` is the client
+    vmap, carrying ``spmd_axis_name`` when the client axis lives on mesh
+    axes.  Both are closures so programs stay oblivious to weighting and
+    sharding concerns.
+    """
+
+    cfg: FedConfig
+    round_idx: Array
+    aggregate: Callable[[Any], Any]
+    vmap_c: Callable
+    client_weights: Optional[Array] = None
+    spec_tree: Any = None
+    client_axes: Any = None
+
+
+@runtime_checkable
+class RoundProgram(Protocol):
+    """One federated algorithm, decomposed into the four round phases."""
+
+    def broadcast(self, loss_fn: LossFn, params, client_batches, ctx: RoundContext):
+        """Server-side prep.  Returns ``(shared, per_client)`` where
+        ``shared`` is broadcast state closed over by every client and
+        ``per_client`` carries a leading client axis (or is None)."""
+        ...
+
+    def client_step(self, loss_fn: LossFn, shared, per_client, batches, ctx: RoundContext):
+        """One client's local work (the runner vmaps this over the cohort)."""
+        ...
+
+    def aggregate(self, shared, client_out, ctx: RoundContext):
+        """Server reduction over the stacked client outputs."""
+        ...
+
+    def finalize(self, loss_fn: LossFn, params, shared, agg, client_batches, ctx: RoundContext):
+        """Post-aggregation server work.  Returns ``(new_params, metrics)``."""
+        ...
+
+
+def make_aggregator(client_weights: Optional[Array]) -> Callable[[Any], Any]:
+    """Leading-axis reduction: plain mean, or normalized ``w``-weighted mean
+    (the paper's §2 non-uniform |X_c| extension)."""
+    if client_weights is None:
+        return tree_mean_leading_axis
+    w = jnp.asarray(client_weights, jnp.float32)
+    w = w / jnp.sum(w)
+
+    def aggregate(tree):
+        return jax.tree.map(
+            lambda x: jnp.tensordot(
+                w.astype(jnp.float32), x.astype(jnp.float32), axes=1
+            ).astype(x.dtype),
+            tree,
+        )
+
+    return aggregate
+
+
+def make_context(
+    cfg: FedConfig,
+    *,
+    round_idx: Array | int = 0,
+    client_weights: Optional[Array] = None,
+    spec_tree=None,
+    client_axes=None,
+) -> RoundContext:
+    vmap_c = (
+        functools.partial(jax.vmap, spmd_axis_name=client_axes)
+        if client_axes
+        else jax.vmap
+    )
+    return RoundContext(
+        cfg=cfg,
+        round_idx=jnp.asarray(round_idx),
+        aggregate=make_aggregator(client_weights),
+        vmap_c=vmap_c,
+        client_weights=client_weights,
+        spec_tree=spec_tree,
+        client_axes=client_axes,
+    )
+
+
+def run_round(
+    program: RoundProgram,
+    loss_fn: LossFn,
+    params,
+    client_batches,
+    cfg: FedConfig,
+    *,
+    round_idx: Array | int = 0,
+    client_weights: Optional[Array] = None,
+    spec_tree=None,
+    client_axes=None,
+):
+    """Execute one round of ``program``.  Returns ``(new_params, metrics)``."""
+    ctx = make_context(
+        cfg,
+        round_idx=round_idx,
+        client_weights=client_weights,
+        spec_tree=spec_tree,
+        client_axes=client_axes,
+    )
+    shared, per_client = program.broadcast(loss_fn, params, client_batches, ctx)
+    client_out = ctx.vmap_c(
+        lambda pc, b: program.client_step(loss_fn, shared, pc, b, ctx),
+        in_axes=(0, 0),
+    )(per_client, client_batches)
+    agg = program.aggregate(shared, client_out, ctx)
+    return program.finalize(loss_fn, params, shared, agg, client_batches, ctx)
+
+
+# ---------------------------------------------------------------------------
+# shared building blocks
+# ---------------------------------------------------------------------------
+
+
+def first_step_batch(client_batches, cfg: FedConfig):
+    """The cohort's step-0 batch: ``x[:, 0]`` under per-step layout."""
+    if cfg.per_step_batches:
+        return jax.tree.map(lambda x: x[:, 0], client_batches)
+    return client_batches
+
+
+def last_step_batch(client_batches, cfg: FedConfig):
+    if cfg.per_step_batches:
+        return jax.tree.map(lambda x: x[:, -1], client_batches)
+    return client_batches
+
+
+def select_step_batch(batches, s: Array, cfg: FedConfig):
+    """One client's batch for local step ``s`` (inside the vmapped scan)."""
+    if cfg.per_step_batches:
+        return jax.tree.map(
+            lambda x: jax.lax.dynamic_index_in_dim(x, s, 0, keepdims=False), batches
+        )
+    return batches
+
+
+def variance_correction(g_global, g_clients):
+    """Control-variate term ``corr_c = ḡ − g_c`` (paper Eq. (4) / Eq. (8)).
+
+    Enters each local step as ``∇L_c(w) + corr_c`` so the expected client
+    update follows the *global* gradient; with a plain-mean aggregate the
+    corrections sum to zero over the cohort.
+    """
+    return jax.tree.map(
+        lambda gbar, gc: jnp.broadcast_to(gbar, gc.shape) - gc, g_global, g_clients
+    )
+
+
+def local_sgd_scan(
+    loss_fn: LossFn,
+    params0,
+    corr,
+    batches,
+    cfg: FedConfig,
+    *,
+    transform_grads: Optional[Callable[[Any], Any]] = None,
+    project: Optional[Callable[[Any], Any]] = None,
+    drift_fn: Optional[Callable[[Any], Array]] = None,
+):
+    """One client's s* local (optionally corrected) SGD steps as a scan.
+
+    The single implementation behind every round program's client loop:
+    FeDLRT passes ``transform_grads``/``project`` to keep coefficient
+    updates in the 2r active directions, the dense baselines use it bare.
+    ``drift_fn`` (optional) accumulates ``max_s drift_fn(params_s)`` — the
+    Theorem-1 diagnostic.  Returns ``(params_s*, max_drift)``.
+    """
+    opt = make_optimizer(cfg.optimizer, cfg.lr, momentum=cfg.momentum)
+    state0 = opt.init(params0)
+
+    def step(carry, s):
+        p, ost, drift = carry
+        b = select_step_batch(batches, s, cfg)
+        g = jax.grad(loss_fn)(p, b)
+        g = jax.tree.map(jnp.add, g, corr)
+        if transform_grads is not None:
+            g = transform_grads(g)
+        upd, ost = opt.update(g, ost, s)
+        # cast: f32 lr × bf16 grad promotes; carry dtype must be stable
+        p = jax.tree.map(lambda t, u: t + u.astype(t.dtype), p, upd)
+        if project is not None:
+            p = project(p)
+        if drift_fn is not None:
+            drift = jnp.maximum(drift, drift_fn(p))
+        return (p, ost, drift), ()
+
+    (p, _, drift), _ = jax.lax.scan(
+        step, (params0, state0, jnp.zeros(())), jnp.arange(cfg.s_star)
+    )
+    return p, drift

@@ -5,5 +5,9 @@ from repro.data.synthetic import (  # noqa: F401
     make_homogeneous_lsq,
     make_token_stream,
 )
-from repro.data.partition import partition_dirichlet, partition_iid  # noqa: F401
+from repro.data.partition import (  # noqa: F401
+    partition_dirichlet,
+    partition_iid,
+    partition_sizes,
+)
 from repro.data.pipeline import FederatedBatcher  # noqa: F401

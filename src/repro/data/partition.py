@@ -14,6 +14,13 @@ def partition_iid(num_points: int, num_clients: int, *, seed: int = 0) -> List[n
     return [perm[c * per : (c + 1) * per] for c in range(num_clients)]
 
 
+def partition_sizes(partitions: List[np.ndarray]) -> np.ndarray:
+    """``|X_c|`` per client — the natural aggregation weights of the
+    paper's §2 weighted-average extension (pass as ``client_weights`` to
+    the engine; it normalizes and slices them per active cohort)."""
+    return np.asarray([len(p) for p in partitions], dtype=np.float32)
+
+
 def partition_dirichlet(
     labels: np.ndarray, num_clients: int, *, alpha: float = 0.5, seed: int = 0
 ) -> List[np.ndarray]:

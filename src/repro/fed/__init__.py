@@ -1,1 +1,2 @@
 from repro.fed.engine import FederatedEngine, RoundResult  # noqa: F401
+from repro.fed.participation import Participation  # noqa: F401

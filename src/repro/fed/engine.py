@@ -1,9 +1,22 @@
 """Federated training engine: multi-round driver over any round function.
 
 Wires together a model loss, a data pipeline (:class:`FederatedBatcher`),
-a round method (FeDLRT / FedAvg / FedLin) and optional checkpointing into a
-restartable driver.  The round function itself stays pure/jitted; the engine
-owns the host-side loop, metric history, and eval.
+a round method (FeDLRT / FedAvg / FedLin / naive low-rank), a per-round
+:class:`repro.fed.participation.Participation` policy and optional
+checkpointing into a restartable driver.  The round function itself stays
+pure/jitted; the engine owns the host-side loop, cohort selection, metric
+history, and eval.
+
+Partial participation: the engine asks the participation policy for the
+active cohort each round, pulls a cohort-shaped batch from the batcher,
+and dispatches to a jitted step *cached per cohort size* (batch shapes —
+and therefore executables — depend only on ``k``, so a C=64 run with
+uniform-8 sampling compiles exactly one extra executable; ``dropout``
+mode has a fluctuating cohort size and compiles one executable per
+distinct size it encounters — prefer uniform/round_robin for large
+models until cohort padding lands).  Weighted
+aggregation (``client_weights`` ∝ |X_c|) is threaded per cohort as a
+traced argument, so re-weighting never recompiles.
 """
 from __future__ import annotations
 
@@ -16,12 +29,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import FedConfig, fedlrt_round
-from repro.core.baselines import fedavg_round, fedlin_round
+from repro.core.baselines import fedavg_round, fedlin_round, fedlrt_naive_round
+from repro.fed.participation import Participation
 
 ROUND_METHODS = {
     "fedlrt": fedlrt_round,
     "fedavg": fedavg_round,
     "fedlin": fedlin_round,
+    "fedlrt_naive": fedlrt_naive_round,
 }
 
 
@@ -33,6 +48,8 @@ class RoundResult:
     comm_bytes_per_client: float
     ranks: Dict[str, np.ndarray]
     seconds: float
+    cohort_size: int = 0
+    cohort: Optional[np.ndarray] = None
 
 
 class FederatedEngine:
@@ -43,6 +60,7 @@ class FederatedEngine:
         cfg: FedConfig,
         *,
         method: str = "fedlrt",
+        participation: Optional[Participation] = None,
         eval_fn: Optional[Callable] = None,
         checkpoint_dir: Optional[str] = None,
         checkpoint_every: int = 0,
@@ -54,31 +72,67 @@ class FederatedEngine:
         self.cfg = cfg
         self.method = method
         self.params = params
+        self.participation = (
+            participation if participation is not None else Participation()
+        )
         self.eval_fn = eval_fn
         self.checkpoint_dir = checkpoint_dir
         self.checkpoint_every = checkpoint_every
         self.history: List[RoundResult] = []
         self.round_idx = 0
-        round_fn = ROUND_METHODS[method]
-
-        if method == "fedlrt":
-            def step(p, b, r):
-                return round_fn(
-                    loss_fn, p, b, cfg, round_idx=r,
-                    client_weights=client_weights,
-                )
-        else:
-            def step(p, b, r):
-                return round_fn(loss_fn, p, b, cfg)
-
-        self._step = jax.jit(step, donate_argnums=(0,) if donate else ())
-
-    def run_round(self, client_batches) -> RoundResult:
-        t0 = time.time()
-        self.params, metrics = self._step(
-            self.params, client_batches, jnp.int32(self.round_idx)
+        self.client_weights = (
+            None if client_weights is None else np.asarray(client_weights, np.float32)
         )
+        self._loss_fn = loss_fn
+        self._round_fn = ROUND_METHODS[method]
+        self._donate = donate
+        self._step_cache: Dict[int, Callable] = {}
+
+    def _step_for(self, cohort_size: int) -> Callable:
+        """Jitted round step for an active cohort of ``cohort_size`` clients.
+
+        One executable per cohort size (batch shapes are k-dependent);
+        ``round_idx`` and ``client_weights`` are traced arguments so they
+        never trigger recompiles.
+        """
+        step = self._step_cache.get(cohort_size)
+        if step is None:
+            cfg_k = dataclasses.replace(self.cfg, num_clients=cohort_size)
+            round_fn, loss_fn = self._round_fn, self._loss_fn
+            if self.client_weights is None:
+                def raw(p, b, r):
+                    return round_fn(loss_fn, p, b, cfg_k, round_idx=r)
+            else:
+                def raw(p, b, r, w):
+                    return round_fn(
+                        loss_fn, p, b, cfg_k, round_idx=r, client_weights=w
+                    )
+            step = jax.jit(raw, donate_argnums=(0,) if self._donate else ())
+            self._step_cache[cohort_size] = step
+        return step
+
+    def run_round(self, client_batches, *, cohort=None) -> RoundResult:
+        """One aggregation round on ``client_batches`` (leading axis = the
+        active cohort).  ``cohort`` (optional index array) attributes the
+        batch rows to population clients — used to slice ``client_weights``
+        and recorded in the history."""
+        t0 = time.time()
+        k = jax.tree.leaves(client_batches)[0].shape[0]
+        cohort = np.arange(k) if cohort is None else np.asarray(cohort)
+        step = self._step_for(k)
+        if self.client_weights is None:
+            self.params, metrics = step(
+                self.params, client_batches, jnp.int32(self.round_idx)
+            )
+        else:
+            w = jnp.asarray(self.client_weights[cohort])
+            self.params, metrics = step(
+                self.params, client_batches, jnp.int32(self.round_idx), w
+            )
         metrics = jax.device_get(metrics)
+        ranks = metrics.get("rank", {})
+        if not isinstance(ranks, dict):  # single-factor methods (naive)
+            ranks = {"": ranks}
         res = RoundResult(
             round_idx=self.round_idx,
             loss_before=float(metrics["loss_before"]),
@@ -86,10 +140,10 @@ class FederatedEngine:
                 float(metrics["loss_after"]) if "loss_after" in metrics else None
             ),
             comm_bytes_per_client=float(metrics.get("comm_bytes_per_client", 0.0)),
-            ranks={
-                k: np.asarray(v) for k, v in metrics.get("rank", {}).items()
-            },
+            ranks={k_: np.asarray(v) for k_, v in ranks.items()},
             seconds=time.time() - t0,
+            cohort_size=k,
+            cohort=cohort,
         )
         self.history.append(res)
         self.round_idx += 1
@@ -108,15 +162,24 @@ class FederatedEngine:
         return res
 
     def train(self, batcher, num_rounds: int, *, log_every: int = 10, to_device=None):
+        num_clients = self.cfg.num_clients
         for _ in range(num_rounds):
-            batch = batcher.next_round()
-            batch = {k: jnp.asarray(v) for k, v in batch.items()}
-            res = self.run_round(batch)
+            cohort = self.participation.cohort(self.round_idx, num_clients)
+            # full participation keeps the legacy no-arg batcher contract so
+            # duck-typed batchers work; partial needs cohort-aware batching
+            if self.participation.mode == "full":
+                batch = batcher.next_round()
+            else:
+                batch = batcher.next_round(cohort)
+            batch = jax.tree.map(jnp.asarray, batch)
+            res = self.run_round(batch, cohort=cohort)
             if log_every and res.round_idx % log_every == 0:
                 extra = ""
                 if res.ranks:
                     mean_rank = np.mean([np.mean(v) for v in res.ranks.values()])
                     extra = f" mean_rank={mean_rank:.1f}"
+                if res.cohort_size != num_clients:
+                    extra += f" cohort={res.cohort_size}/{num_clients}"
                 print(
                     f"[{self.method}] round {res.round_idx:4d} "
                     f"loss {res.loss_before:.4f}"
@@ -131,7 +194,12 @@ class FederatedEngine:
         return float(self.eval_fn(self.params, batch))
 
     def comm_total_bytes(self) -> float:
+        """Total server-side on-wire bytes so far.
+
+        Scales with the *active cohort* of every round, not the client
+        population — under uniform-k sampling this is k/C of the full-
+        participation figure.
+        """
         return float(
-            sum(r.comm_bytes_per_client for r in self.history)
-            * self.cfg.num_clients
+            sum(r.comm_bytes_per_client * r.cohort_size for r in self.history)
         )

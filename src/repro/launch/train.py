@@ -24,8 +24,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import FedConfig
-from repro.data import FederatedBatcher, make_token_stream, partition_iid
-from repro.fed import FederatedEngine
+from repro.data import FederatedBatcher, make_token_stream, partition_iid, partition_sizes
+from repro.fed import FederatedEngine, Participation
 from repro.models import build_model
 from repro.models.config import LowRankPolicy, ModelConfig, reduced
 
@@ -67,6 +67,14 @@ def main(argv=None):
     ap.add_argument("--method", default="fedlrt", choices=["fedlrt", "fedavg", "fedlin"])
     ap.add_argument("--correction", default="simplified")
     ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument(
+        "--participation", type=str, default="full",
+        help="per-round cohort policy: full | uniform:K | round_robin:K | dropout:P",
+    )
+    ap.add_argument(
+        "--weighted", action="store_true",
+        help="aggregate with client weights ∝ |X_c| (paper §2 extension)",
+    )
     ap.add_argument("--rounds", type=int, default=40)
     ap.add_argument("--local-steps", type=int, default=4)
     ap.add_argument("--batch", type=int, default=4)
@@ -103,15 +111,20 @@ def main(argv=None):
         correction=args.correction if args.method == "fedlrt" else "none",
         tau=args.tau,
     )
+    participation = Participation.from_spec(args.participation, seed=args.seed)
     eng = FederatedEngine(
         model.loss_fn, params, fc, method=args.method,
+        participation=participation,
+        client_weights=partition_sizes(parts) if args.weighted else None,
         checkpoint_dir=args.checkpoint_dir,
         checkpoint_every=20 if args.checkpoint_dir else 0,
     )
     hist = eng.train(batcher, args.rounds, log_every=args.log_every)
+    mean_cohort = np.mean([r.cohort_size for r in hist])
     print(
         f"done: loss {hist[0].loss_before:.4f} → {hist[-1].loss_before:.4f}; "
-        f"total comm {eng.comm_total_bytes()/1e6:.1f} MB"
+        f"total comm {eng.comm_total_bytes()/1e6:.1f} MB "
+        f"(mean cohort {mean_cohort:.1f}/{args.clients})"
     )
     return hist
 

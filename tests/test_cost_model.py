@@ -43,3 +43,16 @@ def test_client_flops_scale_linearly_in_n():
     a = cm.client_flops_per_local_step({"w": f1}, batch_tokens=32)
     b = cm.client_flops_per_local_step({"w": f2}, batch_tokens=32)
     assert 1.8 < b / a < 2.2
+
+
+def test_round_total_comm_scales_with_cohort():
+    f = init_factor(jax.random.PRNGKey(0), 100, 60, r_max=8)
+    params = {"w": f}
+    per = cm.fedlrt_round_comm_bytes(params, "simplified")
+    assert cm.round_total_comm_bytes(
+        params, "fedlrt", correction="simplified", cohort_size=3
+    ) == 3 * per
+    dense = {"w": jnp.zeros((64, 64))}
+    assert cm.round_total_comm_bytes(
+        dense, "fedavg", cohort_size=5
+    ) == 5 * cm.dense_round_comm_bytes(dense, "fedavg")

@@ -1,0 +1,231 @@
+"""Partial client participation: policies, engine plumbing, invariances.
+
+The load-bearing invariance: a uniform-k policy with k == C must reproduce
+the full-participation run *bit-for-bit* (sorted cohorts, same batch
+stacking order, same jit executable), so partial-participation experiments
+are directly comparable against the paper's full-participation results.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FedConfig, init_factor, lr_matmul, materialize
+from repro.data import FederatedBatcher, make_classification_data, partition_iid
+from repro.fed import FederatedEngine, Participation
+
+C, DIM, NCLS = 4, 16, 4
+
+
+def _loss(f, batch):
+    logits = lr_matmul(batch["x"], f)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, batch["y"][:, None], -1))
+
+
+def _setup(seed=0):
+    x, y = make_classification_data(
+        dim=DIM, num_classes=NCLS, rank=3, num_points=1024, noise=0.2, seed=seed
+    )
+    parts = partition_iid(len(x), C, seed=seed)
+    batcher = FederatedBatcher({"x": x, "y": y}, parts, batch_size=16, seed=seed)
+    f = init_factor(jax.random.PRNGKey(seed), DIM, NCLS, r_max=4, init_rank=4)
+    cfg = FedConfig(
+        num_clients=C, s_star=3, lr=0.05, correction="simplified", tau=0.05,
+        eval_after=False,
+    )
+    return f, cfg, batcher
+
+
+# ------------------------------------------------------------------ policies
+def test_full_mode_is_identity():
+    p = Participation()
+    np.testing.assert_array_equal(p.cohort(0, 5), np.arange(5))
+    np.testing.assert_array_equal(p.cohort(99, 5), np.arange(5))
+
+
+def test_uniform_mode_samples_sorted_subsets():
+    p = Participation(mode="uniform", cohort_size=3, seed=1)
+    seen = set()
+    for r in range(20):
+        c = p.cohort(r, 8)
+        assert len(c) == 3 and len(set(c.tolist())) == 3
+        assert np.all(np.diff(c) > 0)  # sorted, unique
+        assert c.min() >= 0 and c.max() < 8
+        # deterministic in (seed, round)
+        np.testing.assert_array_equal(c, p.cohort(r, 8))
+        seen.update(c.tolist())
+    assert seen == set(range(8))  # over many rounds every client appears
+
+
+def test_round_robin_covers_population_each_cycle():
+    p = Participation(mode="round_robin", cohort_size=2, seed=0)
+    union = set()
+    for r in range(4):  # C/k = 4 rounds per cycle
+        union.update(p.cohort(r, 8).tolist())
+    assert union == set(range(8))
+
+
+def test_dropout_excludes_stragglers_but_keeps_min_cohort():
+    p = Participation(mode="dropout", dropout_prob=0.5, seed=0)
+    sizes = [len(p.cohort(r, 8)) for r in range(50)]
+    assert min(sizes) >= 1 and max(sizes) <= 8
+    assert any(s < 8 for s in sizes)  # stragglers actually excluded
+    # pathological straggling still yields a workable cohort
+    p_all = Participation(mode="dropout", dropout_prob=1.0, min_cohort=2)
+    assert len(p_all.cohort(0, 8)) == 2
+
+
+def test_from_spec_parsing():
+    assert Participation.from_spec("full").mode == "full"
+    p = Participation.from_spec("uniform:3", seed=7)
+    assert p.mode == "uniform" and p.cohort_size == 3 and p.seed == 7
+    assert Participation.from_spec("round_robin:2").cohort_size == 2
+    assert Participation.from_spec("dropout:0.25").dropout_prob == 0.25
+    with pytest.raises(ValueError):
+        Participation.from_spec("bogus")
+    with pytest.raises(ValueError):
+        Participation(mode="uniform")  # cohort_size required
+
+
+def test_expected_cohort_size():
+    assert Participation().expected_cohort_size(8) == 8.0
+    assert Participation(mode="uniform", cohort_size=3).expected_cohort_size(8) == 3.0
+    assert Participation(
+        mode="dropout", dropout_prob=0.25
+    ).expected_cohort_size(8) == pytest.approx(6.0)
+
+
+# ------------------------------------------------------- engine invariances
+def test_sampling_all_clients_matches_full_bitwise():
+    """uniform-k with k == C ≡ full participation, bit-for-bit."""
+    rounds = 3
+    f, cfg, batcher_a = _setup()
+    _, _, batcher_b = _setup()
+    eng_full = FederatedEngine(_loss, f, cfg, method="fedlrt", donate=False)
+    eng_samp = FederatedEngine(
+        _loss, f, cfg, method="fedlrt",
+        participation=Participation(mode="uniform", cohort_size=C, seed=3),
+        donate=False,
+    )
+    eng_full.train(batcher_a, rounds, log_every=0)
+    eng_samp.train(batcher_b, rounds, log_every=0)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+        eng_full.params,
+        eng_samp.params,
+    )
+    assert [r.loss_before for r in eng_full.history] == [
+        r.loss_before for r in eng_samp.history
+    ]
+    assert all(r.cohort_size == C for r in eng_samp.history)
+
+
+def test_partial_cohort_runs_and_comm_scales_with_cohort():
+    f, cfg, batcher = _setup()
+    eng = FederatedEngine(
+        _loss, f, cfg, method="fedlrt",
+        participation=Participation(mode="uniform", cohort_size=2, seed=0),
+        donate=False,
+    )
+    hist = eng.train(batcher, 4, log_every=0)
+    assert all(r.cohort_size == 2 for r in hist)
+    assert all(len(r.cohort) == 2 for r in hist)
+    # server comm counts only the active cohort, not the population, and
+    # agrees with the analytic cost-model counter
+    from repro.core import cost_model
+
+    per_client = hist[0].comm_bytes_per_client
+    assert eng.comm_total_bytes() == pytest.approx(4 * 2 * per_client)
+    assert eng.comm_total_bytes() == pytest.approx(
+        4 * cost_model.round_total_comm_bytes(
+            f, "fedlrt", correction=cfg.correction, cohort_size=2
+        )
+    )
+    assert np.isfinite([r.loss_before for r in hist]).all()
+
+
+def test_per_cohort_jit_cache_one_executable_per_size():
+    f, cfg, batcher = _setup()
+    eng = FederatedEngine(
+        _loss, f, cfg, method="fedlrt",
+        participation=Participation(mode="dropout", dropout_prob=0.4, seed=2),
+        donate=False,
+    )
+    hist = eng.train(batcher, 6, log_every=0)
+    sizes = {r.cohort_size for r in hist}
+    assert set(eng._step_cache.keys()) == sizes
+
+
+def test_engine_weighted_uniform_weights_match_unweighted():
+    """client_weights plumbing through the engine: uniform |X_c| weights
+    agree with the unweighted mean path (equal-size iid partitions)."""
+    rounds = 2
+    f, cfg, batcher_a = _setup()
+    _, _, batcher_b = _setup()
+    eng_plain = FederatedEngine(_loss, f, cfg, method="fedlrt", donate=False)
+    eng_w = FederatedEngine(
+        _loss, f, cfg, method="fedlrt", client_weights=np.full(C, 256.0), donate=False
+    )
+    eng_plain.train(batcher_a, rounds, log_every=0)
+    eng_w.train(batcher_b, rounds, log_every=0)
+    np.testing.assert_allclose(
+        np.asarray(materialize(eng_plain.params)),
+        np.asarray(materialize(eng_w.params)),
+        atol=1e-5,
+    )
+
+
+def test_engine_weights_sliced_per_cohort():
+    """Partial participation slices the population weight vector to the
+    active cohort — skewing an absent client's weight must not matter."""
+    f, cfg, _ = _setup()
+    x, y = make_classification_data(
+        dim=DIM, num_classes=NCLS, rank=3, num_points=1024, noise=0.2, seed=0
+    )
+    parts = partition_iid(len(x), C, seed=0)
+    batch = FederatedBatcher({"x": x, "y": y}, parts, batch_size=16, seed=0).next_round(
+        [0, 2]
+    )
+    batch = jax.tree.map(jnp.asarray, batch)
+    w = np.array([1.0, 99.0, 1.0, 7.0], np.float32)
+    eng = FederatedEngine(_loss, f, cfg, method="fedlrt", client_weights=w, donate=False)
+    res = eng.run_round(batch, cohort=[0, 2])
+    assert res.cohort_size == 2
+    # same round with the absent clients' weights perturbed: identical
+    w2 = np.array([1.0, -5.0, 1.0, 0.0], np.float32)
+    eng2 = FederatedEngine(_loss, f, cfg, method="fedlrt", client_weights=w2, donate=False)
+    res2 = eng2.run_round(batch, cohort=[0, 2])
+    np.testing.assert_array_equal(
+        np.asarray(materialize(eng.params)), np.asarray(materialize(eng2.params))
+    )
+    assert res.loss_before == res2.loss_before
+
+
+def test_engine_all_methods_run_partial():
+    """Every registered round method accepts cohort-sized batches."""
+    x, y = make_classification_data(
+        dim=DIM, num_classes=NCLS, rank=3, num_points=512, noise=0.2, seed=1
+    )
+    parts = partition_iid(len(x), C, seed=1)
+    part = Participation(mode="round_robin", cohort_size=2, seed=1)
+    for method in ("fedlrt", "fedavg", "fedlin"):
+        if method == "fedlrt":
+            params = init_factor(jax.random.PRNGKey(1), DIM, NCLS, r_max=4, init_rank=4)
+            loss = _loss
+        else:
+            params = {"w": jnp.zeros((DIM, NCLS))}
+            loss = lambda p, b: -jnp.mean(
+                jnp.take_along_axis(
+                    jax.nn.log_softmax(b["x"] @ p["w"]), b["y"][:, None], -1
+                )
+            )
+        batcher = FederatedBatcher({"x": x, "y": y}, parts, batch_size=8, seed=1)
+        cfg = FedConfig(
+            num_clients=C, s_star=2, lr=0.05, correction="none", tau=0.05,
+            eval_after=False,
+        )
+        eng = FederatedEngine(loss, params, cfg, method=method, participation=part, donate=False)
+        hist = eng.train(batcher, 2, log_every=0)
+        assert all(r.cohort_size == 2 for r in hist)
+        assert np.isfinite([r.loss_before for r in hist]).all()

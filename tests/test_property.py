@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional test dependency (pip install hypothesis)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import FedConfig, fedlrt_round, init_factor, materialize
 from repro.core.dlrt import augment_basis, pick_rank, truncate

@@ -56,9 +56,9 @@ def test_roofline_terms_and_dominance():
 
 def test_real_compiled_module_collectives():
     """An actual psum lowering must be detected by the parser."""
-    mesh = jax.make_mesh(
-        (1,), ("x",), axis_types=(jax.sharding.AxisType.Auto,)
-    )
+    from repro.launch.mesh import mesh_kwargs
+
+    mesh = jax.make_mesh((1,), ("x",), **mesh_kwargs(1))
 
     def f(a):
         return jax.lax.psum(a, "x")

@@ -1,0 +1,169 @@
+"""The RoundProgram abstraction: legacy wrappers, shared helpers, weights.
+
+Covers the refactor contract: each legacy ``*_round`` entry point is a thin
+wrapper over ``run_round(<Program>(), ...)`` and must match it bit-for-bit;
+the shared variance-correction helper has the control-variate zero-mean
+property; weighted aggregation works uniformly across methods (including
+the previously fedlrt-only ``client_weights`` path).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FedAvgProgram,
+    FedConfig,
+    FedLinProgram,
+    FedLRTNaiveProgram,
+    FedLRTProgram,
+    fedavg_round,
+    fedlin_round,
+    fedlrt_naive_round,
+    fedlrt_round,
+    init_factor,
+    lr_matmul,
+    materialize,
+    run_round,
+    variance_correction,
+)
+
+from conftest import as_batches, lsq_dense_loss, lsq_loss
+
+
+@pytest.fixture()
+def cfg():
+    return FedConfig(num_clients=4, s_star=3, lr=0.05, correction="simplified", tau=0.05)
+
+
+def _factor_loss(p, batch):
+    return jnp.mean((lr_matmul(batch["x"], p) - batch["y"]) ** 2)
+
+
+def _factor_setup(C=4):
+    f = init_factor(jax.random.PRNGKey(0), 12, 12, r_max=4, init_rank=4)
+    ks = jax.random.split(jax.random.PRNGKey(1), 2)
+    batch = {
+        "x": jax.random.normal(ks[0], (C, 16, 12)),
+        "y": jax.random.normal(ks[1], (C, 16, 12)),
+    }
+    return f, batch
+
+
+def test_legacy_wrappers_match_run_round(homo_prob, cfg):
+    """``fedavg_round``/``fedlin_round``/``fedlrt_round`` ≡ explicit
+    run_round on the corresponding program, bit-for-bit."""
+    batches = as_batches(homo_prob)
+    W0 = jnp.zeros((20, 20))
+    for wrapper, program, loss, p0 in (
+        (fedavg_round, FedAvgProgram(), lsq_dense_loss, W0),
+        (fedlin_round, FedLinProgram(), lsq_dense_loss, W0),
+        (
+            fedlrt_round,
+            FedLRTProgram(),
+            lsq_loss,
+            init_factor(jax.random.PRNGKey(0), 20, 20, r_max=10, init_rank=10),
+        ),
+    ):
+        p_a, m_a = wrapper(loss, p0, batches, cfg)
+        p_b, m_b = run_round(program, loss, p0, batches, cfg)
+        jax.tree.map(
+            lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+            p_a,
+            p_b,
+        )
+        np.testing.assert_array_equal(
+            np.asarray(m_a["loss_before"]), np.asarray(m_b["loss_before"])
+        )
+
+
+def test_naive_wrapper_matches_run_round(homo_prob, cfg):
+    batches = as_batches(homo_prob)
+    f = init_factor(jax.random.PRNGKey(0), 20, 20, r_max=10, init_rank=10)
+    f_a, _ = fedlrt_naive_round(lsq_loss, f, batches, cfg)
+    f_b, _ = run_round(FedLRTNaiveProgram(), lsq_loss, f, batches, cfg)
+    np.testing.assert_array_equal(np.asarray(f_a.S), np.asarray(f_b.S))
+
+
+def test_variance_correction_zero_mean():
+    """corr_c = ḡ − g_c: the control variates cancel in the plain-mean
+    aggregate, so they change no expected update direction."""
+    g_c = {
+        "w": jax.random.normal(jax.random.PRNGKey(0), (5, 7, 3)),
+        "b": jax.random.normal(jax.random.PRNGKey(1), (5, 3)),
+    }
+    g = jax.tree.map(lambda x: jnp.mean(x, axis=0), g_c)
+    corr = variance_correction(g, g_c)
+    for leaf in jax.tree.leaves(corr):
+        np.testing.assert_allclose(np.mean(np.asarray(leaf), axis=0), 0.0, atol=1e-6)
+
+
+def _dense_loss(p, batch):
+    return jnp.mean((batch["x"] @ p["w"] + p["b"] - batch["y"]) ** 2)
+
+
+@pytest.mark.parametrize("round_fn", [fedavg_round, fedlin_round])
+def test_weighted_aggregation_onehot_picks_client(round_fn, cfg):
+    """Baselines now share the weighted-aggregation path: a one-hot weight
+    vector must reproduce the single-client round on that client's data."""
+    loss = _dense_loss
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    f = {
+        "w": 0.1 * jax.random.normal(ks[0], (12, 12)),
+        "b": jnp.zeros((12,)),
+    }
+    batch = {
+        "x": jax.random.normal(ks[1], (4, 16, 12)),
+        "y": jax.random.normal(ks[2], (4, 16, 12)),
+    }
+    w = jnp.array([1.0, 0.0, 0.0, 0.0])
+    p_w, _ = round_fn(loss, f, batch, cfg, client_weights=w)
+    cfg1 = FedConfig(
+        num_clients=1, s_star=cfg.s_star, lr=cfg.lr,
+        correction=cfg.correction, tau=cfg.tau,
+    )
+    one = {k: v[:1] for k, v in batch.items()}
+    p_1, _ = round_fn(loss, f, one, cfg1)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=1e-5
+        ),
+        p_w,
+        p_1,
+    )
+
+
+def test_fedlrt_weighted_uniform_equals_mean(cfg):
+    """Uniform explicit weights take the tensordot path yet must agree with
+    the default mean aggregation (the fedlrt client_weights contract)."""
+    f, batch = _factor_setup(C=4)
+    p_mean, m_mean = fedlrt_round(_factor_loss, f, batch, cfg)
+    p_w, m_w = fedlrt_round(
+        _factor_loss, f, batch, cfg, client_weights=jnp.full((4,), 0.25)
+    )
+    np.testing.assert_allclose(
+        np.asarray(materialize(p_mean)), np.asarray(materialize(p_w)), atol=1e-5
+    )
+    np.testing.assert_allclose(
+        float(m_mean["loss_after"]), float(m_w["loss_after"]), atol=1e-5
+    )
+
+
+def test_fedlrt_skewed_weights_change_result(cfg):
+    """Non-uniform weights must actually flow through every aggregate."""
+    f, batch = _factor_setup(C=4)
+    p_mean, _ = fedlrt_round(_factor_loss, f, batch, cfg)
+    p_skew, _ = fedlrt_round(
+        _factor_loss, f, batch, cfg, client_weights=jnp.array([8.0, 1.0, 1.0, 1.0])
+    )
+    assert not np.allclose(
+        np.asarray(materialize(p_mean)), np.asarray(materialize(p_skew)), atol=1e-6
+    )
+
+
+def test_naive_round_accepts_weights(homo_prob, cfg):
+    batches = as_batches(homo_prob)
+    f = init_factor(jax.random.PRNGKey(0), 20, 20, r_max=10, init_rank=10)
+    f_u, _ = fedlrt_naive_round(lsq_loss, f, batches, cfg, client_weights=jnp.ones(4))
+    f_m, _ = fedlrt_naive_round(lsq_loss, f, batches, cfg)
+    np.testing.assert_allclose(np.asarray(f_u.S), np.asarray(f_m.S), atol=1e-5)
