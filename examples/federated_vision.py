@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import FedConfig, init_factor
+from repro.core.factorization import is_factor, lr_matmul
 from repro.data import (
     FederatedBatcher,
     make_classification_data,
@@ -49,30 +50,34 @@ def init_params(key, lowrank=True):
     }
 
 
-def loss_fn(p, batch):
-    h = batch["x"]
-    if hasattr(p["w1"], "U"):
-        h = ((h @ p["w1"].U) @ p["w1"].S) @ p["w1"].V.T
-    else:
-        h = h @ p["w1"]
-    h = jax.nn.relu(h + p["b1"])
-    logits = h @ p["w2"] + p["b2"]
-    logp = jax.nn.log_softmax(logits)
-    return -jnp.mean(jnp.take_along_axis(logp, batch["y"][:, None], -1))
+def _hidden(p, x, kernels="off"):
+    """First (possibly factorized) layer: x @ w1 through the rank
+    bottleneck — lr_matmul dispatches to the fused Pallas chain under a
+    kernel policy, for LowRankFactor and the client loop's
+    AugmentedFactor alike."""
+    if is_factor(p["w1"]):
+        return lr_matmul(x, p["w1"], kernels=kernels)
+    return x @ p["w1"]
 
 
-def accuracy(p, x, y):
-    h = x
-    if hasattr(p["w1"], "U"):
-        h = ((h @ p["w1"].U) @ p["w1"].S) @ p["w1"].V.T
-    else:
-        h = h @ p["w1"]
-    h = jax.nn.relu(h + p["b1"])
+def make_loss_fn(kernels="off"):
+    def loss_fn(p, batch):
+        h = jax.nn.relu(_hidden(p, batch["x"], kernels) + p["b1"])
+        logits = h @ p["w2"] + p["b2"]
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, batch["y"][:, None], -1))
+
+    return loss_fn
+
+
+def accuracy(p, x, y, kernels="off"):
+    h = jax.nn.relu(_hidden(p, x, kernels) + p["b1"])
     pred = jnp.argmax(h @ p["w2"] + p["b2"], -1)
     return float(jnp.mean(pred == y))
 
 
-def run(method, C, rounds, x, y, xt, yt, seed=0, participation=None, weighted=False):
+def run(method, C, rounds, x, y, xt, yt, seed=0, participation=None,
+        weighted=False, kernels="off"):
     parts = partition_dirichlet(y, C, alpha=0.3, seed=seed)
     s_star = max(240 // C, 1)
     batcher = FederatedBatcher(
@@ -85,13 +90,13 @@ def run(method, C, rounds, x, y, xt, yt, seed=0, participation=None, weighted=Fa
     lowrank = method.startswith("fedlrt")
     params = init_params(jax.random.PRNGKey(seed), lowrank=lowrank)
     eng = FederatedEngine(
-        loss_fn, params, cfg,
+        make_loss_fn(kernels), params, cfg,
         method="fedlrt" if lowrank else method,
         participation=participation,
         client_weights=partition_sizes(parts) if weighted else None,
     )
     hist = eng.train(batcher, rounds, log_every=0)
-    acc = accuracy(eng.params, xt, yt)
+    acc = accuracy(eng.params, xt, yt, kernels)
     rank = int(eng.params["w1"].rank) if lowrank else "-"
     mean_cohort = float(np.mean([r.cohort_size for r in hist]))
     return acc, eng.comm_total_bytes(), rank, mean_cohort
@@ -107,6 +112,10 @@ def main():
     )
     ap.add_argument("--weighted", action="store_true",
                     help="client weights ∝ |X_c| in every aggregation")
+    ap.add_argument("--kernels", default="off",
+                    choices=["auto", "interpret", "off"],
+                    help="Pallas low-rank kernel dispatch for the factorized "
+                    "layer (auto = TPU only; interpret = CPU validation)")
     args = ap.parse_args()
 
     x, y = make_classification_data(
@@ -124,6 +133,7 @@ def main():
             acc, comm, rank, mean_cohort = run(
                 method, C, args.rounds, x, y, xt, yt,
                 participation=participation, weighted=args.weighted,
+                kernels=args.kernels,
             )
             cells.append(
                 f"acc={acc:.3f} comm={comm/1e6:5.1f}MB "

@@ -87,4 +87,6 @@ def load_checkpoint(path: str):
                 rank=jnp.asarray(fields["rank"]),
             ),
         )
+    if set(tree) == {""}:  # bare root-level leaf (e.g. a single factor)
+        return tree[""], meta
     return tree, meta

@@ -70,7 +70,9 @@ class _DenseProgram:
             )
         shared = {
             "params0": params,
-            "loss_before": jnp.mean(losses),
+            # ctx.aggregate, not jnp.mean: consistent with the weighted
+            # parameter aggregation (and spmd_axis_name under sharding)
+            "loss_before": ctx.aggregate(losses),
             "first": first,
         }
         return shared, corr_c
@@ -91,8 +93,8 @@ class _DenseProgram:
             ),
         }
         if ctx.cfg.eval_after:
-            metrics["loss_after"] = jnp.mean(
-                jax.vmap(loss_fn, in_axes=(None, 0))(new_params, shared["first"])
+            metrics["loss_after"] = ctx.aggregate(
+                ctx.vmap_c(loss_fn, in_axes=(None, 0))(new_params, shared["first"])
             )
         return new_params, metrics
 
@@ -190,7 +192,7 @@ class FedLRTNaiveProgram:
 
     def broadcast(self, loss_fn, f: LowRankFactor, client_batches, ctx: RoundContext):
         losses = ctx.vmap_c(lambda b: loss_fn(f, b))(client_batches)
-        return {"f": f, "loss_before": jnp.mean(losses)}, None
+        return {"f": f, "loss_before": ctx.aggregate(losses)}, None
 
     def client_step(self, loss_fn, shared, _pc, batch, ctx: RoundContext):
         return _naive_client_round(loss_fn, shared["f"], batch, ctx.cfg)
@@ -231,8 +233,8 @@ class FedLRTNaiveProgram:
             ),
         }
         if cfg.eval_after:
-            metrics["loss_after"] = jnp.mean(
-                jax.vmap(lambda b: loss_fn(new_f, b))(client_batches)
+            metrics["loss_after"] = ctx.aggregate(
+                ctx.vmap_c(lambda b: loss_fn(new_f, b))(client_batches)
             )
         return new_f, metrics
 

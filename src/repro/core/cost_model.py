@@ -16,6 +16,7 @@ function says bytes; ``b`` = local batch size, ``s*`` = local iterations.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.factorization import LowRankFactor, is_factor
 
@@ -123,17 +124,53 @@ def fedlrt_round_comm_bytes(params, correction: str = "simplified") -> int:
     total = 0
     for f in _factor_leaves(params):
         n_in, n_out, r = f.n_in, f.n_out, f.r_max
+        # stacked-layer / expert factors (leading buffer dims) put every
+        # slice on the wire
+        stack = 1
+        for d in f.U.shape[:-2]:
+            stack *= int(d)
         nr = (n_in + n_out) * r
-        total += nr + r * r  # initial broadcast
-        total += nr  # basis-gradient upload
-        total += nr  # augmented-basis broadcast
+        per = nr + r * r  # initial broadcast
+        per += nr  # basis-gradient upload
+        per += nr  # augmented-basis broadcast
         if correction == "simplified":
-            total += 2 * r * r  # G_S up + down
+            per += 2 * r * r  # G_S up + down
         elif correction == "full":
-            total += 2 * (2 * r) ** 2  # G_S̃ up + down
-        total += (2 * r) ** 2  # coefficient upload
+            per += 2 * (2 * r) ** 2  # G_S̃ up + down
+        per += (2 * r) ** 2  # coefficient upload
+        total += stack * per
     for x in _dense_leaves(params):
         total += 4 * x.size
+    return total * BYTES
+
+
+def fedlrt_round_comm_bytes_effective(params, correction: str = "simplified"):
+    """Per-client on-wire bytes priced at each factor's *current* rank.
+
+    Same accounting as :func:`fedlrt_round_comm_bytes` but with ``r`` the
+    factor's dynamic ``rank`` instead of the static ``r_max`` buffer width
+    — this is what a deployment that ships only active columns would put on
+    the wire, and (unlike the static bound) it shrinks as truncation adapts
+    ranks downward.  jnp-based so it can be traced inside a jitted round;
+    returns an f32 scalar.  Batched (stacked-layer / expert) factors sum
+    their per-slice ranks.  Always ≤ the static bound.
+    """
+    total = jnp.zeros((), jnp.float32)
+    for f in _factor_leaves(params):
+        r = f.rank.astype(jnp.float32)  # scalar or (stack...,) per-slice ranks
+        nr = (f.n_in + f.n_out) * r
+        r2 = r * r
+        per = nr + r2  # initial broadcast (U, V, S at rank r)
+        per = per + nr  # basis-gradient upload
+        per = per + nr  # augmented-basis broadcast
+        if correction == "simplified":
+            per = per + 2.0 * r2  # G_S up + down
+        elif correction == "full":
+            per = per + 2.0 * (2.0 * r) ** 2  # G_S̃ up + down
+        per = per + (2.0 * r) ** 2  # coefficient upload
+        total = total + jnp.sum(per)
+    for x in _dense_leaves(params):
+        total = total + 4.0 * x.size
     return total * BYTES
 
 

@@ -118,13 +118,33 @@ def materialize(f: LowRankFactor | AugmentedFactor) -> Array:
     return jnp.einsum("...ir,...rs,...js->...ij", f.U, f.S, f.V)
 
 
-def lr_matmul(x: Array, f: LowRankFactor | AugmentedFactor, *, precision=None) -> Array:
+def lr_matmul(
+    x: Array,
+    f: LowRankFactor | AugmentedFactor,
+    *,
+    precision=None,
+    kernels: str = "off",
+) -> Array:
     """``y = x @ (U S Vᵀ)`` evaluated through the rank bottleneck.
 
     Cost ``O(b·n·r)`` instead of ``O(b·n²)``; the full matrix is never
     formed.  This is the client-side compute saving of the paper
-    (Table 1) and the contraction our Pallas kernel fuses on TPU.
+    (Table 1) and the contraction our Pallas kernel fuses on TPU:
+    ``kernels`` ("auto" | "interpret" | "off") dispatches to the fused
+    ``xus``/``avt`` chain with its ``atb``-backed custom VJP.  Works for
+    both factor classes — the AugmentedFactor's zeroed inactive columns
+    keep the fused chain exactly equal to the masked reference chain.
     """
+    if kernels != "off":
+        from repro.kernels.ops import lowrank_apply_nd, use_kernels_for
+
+        return lowrank_apply_nd(
+            x,
+            f.U.astype(x.dtype),
+            f.S.astype(x.dtype),
+            f.V.astype(x.dtype),
+            use_kernels_for(kernels),
+        )
     h = jnp.matmul(x, f.U, precision=precision)
     h = jnp.matmul(h, f.S.astype(h.dtype), precision=precision)
     return jnp.matmul(h, f.V.T.astype(h.dtype), precision=precision)

@@ -198,7 +198,10 @@ class FedLRTProgram:
             jax.value_and_grad(loss_fn), in_axes=(None, 0)
         )(params, first_batch)
         per_client_g = _constrain_clientwise(per_client_g, ctx)
-        loss_before = jnp.mean(losses)
+        # weighted mean, consistent with every other aggregate of the round
+        # (a bare jnp.mean under client_weights reports the unweighted loss
+        # of a weighted run, and drops spmd_axis_name on a sharded C axis)
+        loss_before = ctx.aggregate(losses)
         g_global = ctx.aggregate(per_client_g)  # server aggregate
 
         # -- 3: server-side basis augmentation (QR), Lemma-1 S̃ assembly -----
@@ -327,16 +330,26 @@ class FedLRTProgram:
             "rank": {k: v["rank"] for k, v in infos.items()},
             "trunc_err": {k: v["trunc_err"] for k, v in infos.items()},
             "grad_norm_S": _coeff_grad_norm(params, shared["g_global"]),
+            # static r_max bound (python int, jit-constant) …
             "comm_bytes_per_client": jnp.float32(
                 cost_model.fedlrt_round_comm_bytes(params, cfg.correction)
+            ),
+            # … and the effective-rank bytes of the *post-truncation* state:
+            # this is the figure that shrinks as truncation adapts ranks.
+            "comm_bytes_per_client_effective": (
+                cost_model.fedlrt_round_comm_bytes_effective(
+                    new_params, cfg.correction
+                )
             ),
         }
         if cfg.track_drift:
             metrics["max_coeff_drift"] = jnp.max(drift_c)
         if cfg.eval_after:
             last_batch = last_step_batch(client_batches, cfg)
-            losses_after = jax.vmap(loss_fn, in_axes=(None, 0))(new_params, last_batch)
-            metrics["loss_after"] = jnp.mean(losses_after)
+            losses_after = ctx.vmap_c(loss_fn, in_axes=(None, 0))(
+                new_params, last_batch
+            )
+            metrics["loss_after"] = ctx.aggregate(losses_after)
         return new_params, metrics
 
 

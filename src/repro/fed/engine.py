@@ -11,12 +11,17 @@ Partial participation: the engine asks the participation policy for the
 active cohort each round, pulls a cohort-shaped batch from the batcher,
 and dispatches to a jitted step *cached per cohort size* (batch shapes —
 and therefore executables — depend only on ``k``, so a C=64 run with
-uniform-8 sampling compiles exactly one extra executable; ``dropout``
-mode has a fluctuating cohort size and compiles one executable per
-distinct size it encounters — prefer uniform/round_robin for large
-models until cohort padding lands).  Weighted
-aggregation (``client_weights`` ∝ |X_c|) is threaded per cohort as a
-traced argument, so re-weighting never recompiles.
+uniform-8 sampling compiles exactly one extra executable).  ``dropout``
+mode — the one policy with a fluctuating cohort size — is *cohort-padded*:
+every round's batch is padded up to the population size with zero-weight
+repeats of active clients, so the whole run shares a single executable
+(see :meth:`FederatedEngine.run_round`).  Weighted aggregation
+(``client_weights`` ∝ |X_c|) is threaded per cohort as a traced argument,
+so re-weighting never recompiles.
+
+Restartability: checkpoints carry ``round_idx`` and a sidecar snapshot of
+the batcher stream state; :meth:`FederatedEngine.restore` resumes a run
+that replays the remaining rounds bit-identically.
 """
 from __future__ import annotations
 
@@ -50,6 +55,9 @@ class RoundResult:
     seconds: float
     cohort_size: int = 0
     cohort: Optional[np.ndarray] = None
+    # effective-rank on-wire bytes (shrinks as truncation adapts ranks);
+    # 0.0 for methods that don't report it (dense baselines)
+    comm_bytes_per_client_effective: float = 0.0
 
 
 class FederatedEngine:
@@ -86,45 +94,77 @@ class FederatedEngine:
         self._loss_fn = loss_fn
         self._round_fn = ROUND_METHODS[method]
         self._donate = donate
-        self._step_cache: Dict[int, Callable] = {}
+        self._step_cache: Dict[tuple, Callable] = {}
+        self._batcher = None  # set by train(); snapshotted into checkpoints
 
-    def _step_for(self, cohort_size: int) -> Callable:
+    def _step_for(self, cohort_size: int, *, weighted: bool) -> Callable:
         """Jitted round step for an active cohort of ``cohort_size`` clients.
 
-        One executable per cohort size (batch shapes are k-dependent);
-        ``round_idx`` and ``client_weights`` are traced arguments so they
-        never trigger recompiles.
+        One executable per (cohort size, weighted?) pair — batch shapes are
+        k-dependent; ``round_idx`` and ``client_weights`` are traced
+        arguments so they never trigger recompiles.
         """
-        step = self._step_cache.get(cohort_size)
+        key = (cohort_size, weighted)
+        step = self._step_cache.get(key)
         if step is None:
             cfg_k = dataclasses.replace(self.cfg, num_clients=cohort_size)
             round_fn, loss_fn = self._round_fn, self._loss_fn
-            if self.client_weights is None:
-                def raw(p, b, r):
-                    return round_fn(loss_fn, p, b, cfg_k, round_idx=r)
-            else:
+            if weighted:
                 def raw(p, b, r, w):
                     return round_fn(
                         loss_fn, p, b, cfg_k, round_idx=r, client_weights=w
                     )
+            else:
+                def raw(p, b, r):
+                    return round_fn(loss_fn, p, b, cfg_k, round_idx=r)
             step = jax.jit(raw, donate_argnums=(0,) if self._donate else ())
-            self._step_cache[cohort_size] = step
+            self._step_cache[key] = step
         return step
 
     def run_round(self, client_batches, *, cohort=None) -> RoundResult:
         """One aggregation round on ``client_batches`` (leading axis = the
         active cohort).  ``cohort`` (optional index array) attributes the
         batch rows to population clients — used to slice ``client_weights``
-        and recorded in the history."""
+        and recorded in the history.
+
+        Cohort padding: when the participation policy reports a fixed
+        ``padded_size`` (dropout mode), the batch is padded up to it with
+        repeats of active clients carrying **zero aggregation weight** —
+        mathematically inert (every aggregate is weight-normalized) but
+        shape-stable, so the whole run reuses a single jit executable
+        instead of one per distinct cohort size.  Comm accounting and the
+        recorded ``cohort_size`` stay at the *true* active-cohort size.
+        """
         t0 = time.time()
         k = jax.tree.leaves(client_batches)[0].shape[0]
         cohort = np.arange(k) if cohort is None else np.asarray(cohort)
-        step = self._step_for(k)
-        if self.client_weights is None:
+        pad_to = self.participation.padded_size(self.cfg.num_clients)
+        if pad_to is not None:
+            w_active = (
+                np.asarray(self.client_weights[cohort], np.float32)
+                if self.client_weights is not None
+                else np.ones(k, np.float32)
+            )
+            if k < pad_to:
+                fill = np.arange(pad_to - k) % k  # repeat active clients
+                idx = np.concatenate([np.arange(k), fill])
+                client_batches = jax.tree.map(
+                    lambda a: jnp.asarray(a)[idx], client_batches
+                )
+            w = jnp.asarray(
+                np.concatenate([w_active, np.zeros(pad_to - k, np.float32)])
+            )
+            step = self._step_for(pad_to, weighted=True)
+            self.params, metrics = step(
+                self.params, client_batches, jnp.int32(self.round_idx), w
+            )
+        elif self.client_weights is None:
+            step = self._step_for(k, weighted=False)
             self.params, metrics = step(
                 self.params, client_batches, jnp.int32(self.round_idx)
             )
         else:
+            step = self._step_for(k, weighted=True)
             w = jnp.asarray(self.client_weights[cohort])
             self.params, metrics = step(
                 self.params, client_batches, jnp.int32(self.round_idx), w
@@ -144,6 +184,9 @@ class FederatedEngine:
             seconds=time.time() - t0,
             cohort_size=k,
             cohort=cohort,
+            comm_bytes_per_client_effective=float(
+                metrics.get("comm_bytes_per_client_effective", 0.0)
+            ),
         )
         self.history.append(res)
         self.round_idx += 1
@@ -152,17 +195,65 @@ class FederatedEngine:
             and self.checkpoint_every
             and self.round_idx % self.checkpoint_every == 0
         ):
-            from repro.checkpoint import save_checkpoint
-
-            save_checkpoint(
-                f"{self.checkpoint_dir}/round_{self.round_idx:06d}.npz",
-                self.params,
-                meta={"round": self.round_idx, "method": self.method},
-            )
+            self._save_checkpoint()
         return res
+
+    # -- checkpoint / restore ----------------------------------------------
+
+    def _ckpt_path(self, round_idx: int) -> str:
+        return f"{self.checkpoint_dir}/round_{round_idx:06d}.npz"
+
+    def _save_checkpoint(self):
+        from repro.checkpoint import save_checkpoint
+
+        path = self._ckpt_path(self.round_idx)
+        save_checkpoint(
+            path,
+            self.params,
+            meta={"round": self.round_idx, "method": self.method},
+        )
+        # sidecar: data-stream state (so a restored run replays the
+        # remaining rounds bit-identically — same per-client shuffle
+        # cursors and RNG states) plus the round history (so cumulative
+        # accounting like comm_total_bytes() spans the whole run)
+        state = {"history": list(self.history)}
+        if self._batcher is not None and hasattr(self._batcher, "state"):
+            state["batcher"] = self._batcher.state()
+        np.save(
+            path + ".state.npy",
+            np.asarray(state, dtype=object),
+            allow_pickle=True,
+        )
+
+    def restore(self, path: str, *, batcher=None) -> dict:
+        """Resume from a checkpoint written by this engine.
+
+        Restores ``params``, ``round_idx`` (so participation policies —
+        seeded by ``(seed, round_idx)`` — replay the same cohorts) and the
+        round ``history`` (so ``comm_total_bytes()`` keeps counting the
+        pre-restart rounds); if ``batcher`` is given and the
+        ``<path>.state.npy`` sidecar exists, also the batcher's stream
+        state.  A restored run then reproduces the uninterrupted run
+        bit-for-bit.  Returns the checkpoint metadata.
+        """
+        import os
+
+        from repro.checkpoint import load_checkpoint
+
+        params, meta = load_checkpoint(path)
+        self.params = params
+        self.round_idx = int(meta.get("round", 0))
+        state_path = path + ".state.npy"
+        if os.path.exists(state_path):
+            state = np.load(state_path, allow_pickle=True).item()
+            self.history = list(state.get("history", []))
+            if batcher is not None and "batcher" in state:
+                batcher.set_state(state["batcher"])
+        return meta
 
     def train(self, batcher, num_rounds: int, *, log_every: int = 10, to_device=None):
         num_clients = self.cfg.num_clients
+        self._batcher = batcher
         for _ in range(num_rounds):
             cohort = self.participation.cohort(self.round_idx, num_clients)
             # full participation keeps the legacy no-arg batcher contract so

@@ -100,6 +100,18 @@ class Participation:
             active = np.concatenate([active, np.asarray(extra[:need], np.int64)])
         return np.sort(active).astype(np.int64)
 
+    def padded_size(self, num_clients: int) -> Optional[int]:
+        """Fixed size the engine pads cohort batches to, or None.
+
+        ``dropout`` is the only mode with a *fluctuating* cohort size; left
+        unpadded it compiles one jit executable per distinct size it
+        encounters.  Padding every round up to the population size with
+        zero-weight filler clients keeps the engine at exactly one
+        executable per run.  The static-cohort modes (full / uniform /
+        round_robin) need no padding.
+        """
+        return int(num_clients) if self.mode == "dropout" else None
+
     def expected_cohort_size(self, num_clients: int) -> float:
         """Mean active-cohort size — used for analytic comm budgeting."""
         if self.mode == "full":

@@ -7,4 +7,11 @@
 Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
 validated on CPU in interpret mode against ref.py.
 """
-from repro.kernels.ops import coeff_grad_kernels, lowrank_apply, lowrank_apply_kernels  # noqa: F401
+from repro.kernels.ops import (  # noqa: F401
+    KERNEL_POLICIES,
+    coeff_grad_kernels,
+    lowrank_apply,
+    lowrank_apply_kernels,
+    lowrank_apply_nd,
+    use_kernels_for,
+)

@@ -52,6 +52,10 @@ def atb(
     Kb = B.shape[1]
     bm, bka = min(bm, M), min(bka, Ka)
     assert M % bm == 0 and Ka % bka == 0, (M, Ka, bm, bka)
+    from repro.kernels.lowrank_matmul import _check_tiles
+
+    _check_tiles(interpret, A.dtype, bm=(bm, "sublane"), bka=(bka, "lane"),
+                 Kb=(Kb, "lane"))
     nm = M // bm
     return pl.pallas_call(
         functools.partial(_atb_kernel, nm=nm),

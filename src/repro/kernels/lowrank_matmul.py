@@ -26,6 +26,28 @@ DEFAULT_BK = 512
 DEFAULT_BN = 256
 
 
+def _min_sublane(dtype) -> int:
+    """MXU minimum second-to-minor tile dim: 8 (f32) / 16 (bf16) / 32 (i8)."""
+    return {4: 8, 2: 16, 1: 32}.get(jnp.dtype(dtype).itemsize, 8)
+
+
+def _check_tiles(interpret: bool, dtype, **tiles):
+    """On the compiled TPU path, reject tile dims the MXU cannot address:
+    sublane dims must be multiples of the dtype minimum, lane dims of 128.
+    Interpret mode (CPU validation) is exempt — it has no tiling hardware.
+    """
+    if interpret:
+        return
+    sub = _min_sublane(dtype)
+    for name, (size, kind) in tiles.items():
+        mult = 128 if kind == "lane" else sub
+        if size % mult:
+            raise ValueError(
+                f"{name}={size} is not a multiple of {mult} "
+                f"({kind} dim, dtype {jnp.dtype(dtype).name})"
+            )
+
+
 def _xus_kernel(x_ref, u_ref, s_ref, a_ref, acc_ref, *, nk: int):
     """grid = (mi, kk).  acc (bm, R) persists across the K loop."""
     kk = pl.program_id(1)
@@ -52,6 +74,8 @@ def xus(x: jax.Array, U: jax.Array, S: jax.Array, *, bm: int = DEFAULT_BM,
     R = U.shape[1]
     bm, bk = min(bm, M), min(bk, K)
     assert M % bm == 0 and K % bk == 0, (M, K, bm, bk)
+    _check_tiles(interpret, x.dtype, bm=(bm, "sublane"), bk=(bk, "lane"),
+                 R=(R, "lane"))
     nk = K // bk
     grid = (M // bm, nk)
     return pl.pallas_call(
@@ -86,6 +110,8 @@ def avt(A: jax.Array, V: jax.Array, *, bm: int = DEFAULT_BM,
     N = V.shape[0]
     bm, bn = min(bm, M), min(bn, N)
     assert M % bm == 0 and N % bn == 0, (M, N, bm, bn)
+    _check_tiles(interpret, A.dtype, bm=(bm, "sublane"), bn=(bn, "lane"),
+                 R=(R, "lane"))
     return pl.pallas_call(
         _avt_kernel,
         grid=(M // bm, N // bn),

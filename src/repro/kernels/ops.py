@@ -16,8 +16,19 @@ reference implementation unless ``interpret=True`` is forced — Pallas TPU
 kernels only *compile* for TPU; interpret mode executes the kernel body in
 Python for correctness validation (used by tests/benchmarks here).
 
-Rank padding: callers may pass any r ≥ 1; inputs are zero-padded to a
-multiple of 128 lanes (exact — padded columns are zero).
+Padding rules (all exact — padded rows/columns are zero):
+- the rank dim is padded to a multiple of 128 lanes;
+- every other dim is padded up to a multiple of its tile size instead of
+  shrinking the tile to a divisor — a prime M costs at most one extra tile
+  of zeros, never a degenerate 1-wide grid;
+- tile sublanes are dtype-aware: (8, 128) for f32 but (16, 128) for bf16,
+  so a bf16 input with ``M % 16 == 8`` pads to the next multiple of 16
+  rather than handing the MXU a misaligned tile.
+
+``lowrank_apply_nd`` generalizes to leading activation batch dims
+((B, T, d) is flattened to 2D) and stacked factors (leading layer/expert
+axes on U/S/V are vmapped — the :class:`LowRankFactor` buffer layout used
+by scanned layer stacks and MoE experts).
 """
 from __future__ import annotations
 
@@ -29,14 +40,80 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.coeff_grad import atb
+from repro.kernels.lowrank_matmul import _min_sublane as _sublane
 from repro.kernels.lowrank_matmul import avt, xus
 
 LANE = 128
 
+#: model-level kernel dispatch policies (ModelConfig.kernels / --kernels)
+KERNEL_POLICIES = ("auto", "interpret", "off")
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def use_kernels_for(policy: str):
+    """Resolve a kernel policy string to the ``lowrank_apply`` flag.
+
+    - ``"auto"``: Pallas kernels on TPU *without an active GSPMD mesh*,
+      jnp reference elsewhere → ``True`` / ``False``.  ``pl.pallas_call``
+      has no SPMD partitioning rule, so under a mesh the compiled kernels
+      would force all-gathers of the sharded activations/factors; the
+      reference chain (which GSPMD partitions fine) is the fast path
+      there until the kernels grow a shard_map wrapper.
+    - ``"interpret"``: force the kernel path through the Pallas interpreter
+      on **any** backend — including TPU, where it overrides the compiled
+      path for interpreter-based validation → ``"interpret"``.
+    - ``"off"``: plain jnp chain → ``False``.
+    """
+    if policy not in KERNEL_POLICIES:
+        raise ValueError(
+            f"kernels policy must be one of {KERNEL_POLICIES}, got {policy!r}"
+        )
+    if policy == "interpret":
+        return "interpret"
+    if policy != "auto" or not on_tpu():
+        return False
+    from repro.utils import meshctx
+
+    return meshctx.mesh() is None
+
+
+def _interpret_mode(use_kernels) -> bool:
+    """``use_kernels`` is False / True / "interpret": plain ``True`` means
+    compiled-on-TPU, interpreter elsewhere; ``"interpret"`` forces the
+    interpreter even on TPU."""
+    return use_kernels == "interpret" or not on_tpu()
+
+
+# ---------------------------------------------------------------------------
+# dtype-aware tile padding
+# ---------------------------------------------------------------------------
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def _block(pref: int, size: int, mult: int) -> int:
+    """Tile size for a dim that will be zero-padded to a multiple of
+    ``mult``: the preferred block when the (padded) dim exceeds it, else
+    the whole padded dim.  Never degrades below ``mult`` — prime dims are
+    padded, not shrunk to 1-wide grids."""
+    assert pref % mult == 0, (pref, mult)
+    padded = _round_up(size, mult)
+    return pref if padded >= pref else padded
+
+
+def _pad2(x, rows: int, cols: int):
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    return jnp.pad(x, ((0, pr), (0, pc))) if pr or pc else x
+
 
 def _pad_rank(U, S, V):
     R = U.shape[1]
-    Rp = -(-R // LANE) * LANE
+    Rp = _round_up(R, LANE)
     if Rp == R:
         return U, S, V
     pu = ((0, 0), (0, Rp - R))
@@ -47,60 +124,78 @@ def _pad_rank(U, S, V):
     )
 
 
-def _pad_rows(x, mult):
-    M = x.shape[0]
-    Mp = -(-M // mult) * mult
-    return (jnp.pad(x, ((0, Mp - M), (0, 0))), M) if Mp != M else (x, M)
+# ---------------------------------------------------------------------------
+# shape-safe kernel wrappers (arbitrary M/K/N; rank dims already LANE-padded)
+# ---------------------------------------------------------------------------
 
 
-def on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+def _xus(x, U, S, *, interpret: bool):
+    """A = (x U) S for arbitrary (M, K); tiles aligned per x's dtype."""
+    M, K = x.shape
+    bm = _block(256, M, _sublane(x.dtype))
+    bk = _block(512, K, LANE)
+    x2 = _pad2(x, _round_up(M, bm), _round_up(K, bk))
+    U2 = _pad2(U, _round_up(K, bk), U.shape[1])
+    return xus(x2, U2, S, bm=bm, bk=bk, interpret=interpret)[:M]
 
 
-def _pick(block, size):
-    b = min(block, size)
-    while size % b:
-        b //= 2
-    return max(b, 1)
+def _avt(A, V, *, interpret: bool):
+    """y = A Vᵀ for arbitrary (M, N)."""
+    M = A.shape[0]
+    N = V.shape[0]
+    bm = _block(256, M, _sublane(A.dtype))
+    bn = _block(256, N, LANE)
+    A2 = _pad2(A, _round_up(M, bm), A.shape[1])
+    V2 = _pad2(V, _round_up(N, bn), V.shape[1])
+    return avt(A2, V2, bm=bm, bn=bn, interpret=interpret)[:M, :N]
+
+
+def _atb(A, B, *, interpret: bool):
+    """C = Aᵀ B for arbitrary (M, Ka); zero rows are exact under the M
+    reduction.  Kb (= the rank dim) must already be LANE-padded."""
+    M, Ka = A.shape
+    bm = _block(512, M, _sublane(A.dtype))
+    bka = _block(256, Ka, LANE)
+    A2 = _pad2(A, _round_up(M, bm), _round_up(Ka, bka))
+    B2 = _pad2(B, _round_up(M, bm), B.shape[1])
+    return atb(A2, B2, bm=bm, bka=bka, interpret=interpret)[:Ka]
 
 
 def lowrank_apply_kernels(x, U, S, V, *, interpret: bool) -> jax.Array:
     """Forward chain through the Pallas kernels (padded + tiled)."""
     U, S, V = _pad_rank(U, S, V)
-    x2, M = _pad_rows(x, 8)
-    bm = _pick(256, x2.shape[0])
-    bk = _pick(512, x2.shape[1])
-    A = xus(x2, U, S, bm=bm, bk=bk, interpret=interpret)
-    bn = _pick(256, V.shape[0])
-    y = avt(A, V, bm=bm, bn=bn, interpret=interpret)
-    return y[:M]
+    A = _xus(x, U, S, interpret=interpret)
+    return _avt(A, V, interpret=interpret)
 
 
 def coeff_grad_kernels(x, dy, U, V, *, interpret: bool) -> jax.Array:
     """∇_S L = (x U)ᵀ (dy V) via the atb kernel (paper's client backward)."""
     R = U.shape[1]
     U2, _, V2 = _pad_rank(U, jnp.zeros((R, R), U.dtype), V)
-    x2, M = _pad_rows(x, 8)
-    dy2, _ = _pad_rows(dy, 8)
     eye = jnp.eye(U2.shape[1], dtype=jnp.float32)
-    bm = _pick(256, x2.shape[0])
-    A = xus(x2, U2, eye, bm=bm, bk=_pick(512, x2.shape[1]), interpret=interpret)
-    B = xus(dy2, V2, eye, bm=bm, bk=_pick(512, dy2.shape[1]), interpret=interpret)
-    C = atb(A, B, bm=_pick(512, A.shape[0]), bka=_pick(256, A.shape[1]),
-            interpret=interpret)
-    return C[:R, :R]
+    A = _xus(x, U2, eye, interpret=interpret)
+    B = _xus(dy, V2, eye, interpret=interpret)
+    return _atb(A, B, interpret=interpret)[:R, :R]
+
+
+# ---------------------------------------------------------------------------
+# custom-VJP entry point
+# ---------------------------------------------------------------------------
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
-def lowrank_apply(x, U, S, V, use_kernels: bool = False):
+def lowrank_apply(x, U, S, V, use_kernels=False):
     """y = ((x U) S) Vᵀ with a kernel-backed custom VJP.
 
-    ``use_kernels``: run the Pallas path (TPU, or interpret on CPU);
-    False → pure-jnp reference (XLA fuses well on its own for small sizes).
+    ``use_kernels``: ``True`` → the Pallas path (compiled on TPU, interpret
+    elsewhere); ``"interpret"`` → the Pallas path through the interpreter
+    on *every* backend (overrides the compiled path on TPU too); ``False``
+    → pure-jnp reference (XLA fuses well on its own for small sizes).
     """
     if use_kernels:
-        interpret = not on_tpu()
-        return lowrank_apply_kernels(x, U, S, V, interpret=interpret)
+        return lowrank_apply_kernels(
+            x, U, S, V, interpret=_interpret_mode(use_kernels)
+        )
     return ref.lowrank_matmul_ref(x, U, S, V)
 
 
@@ -111,29 +206,27 @@ def _fwd(x, U, S, V, use_kernels):
 
 def _bwd(use_kernels, resids, dy):
     x, U, S, V = resids
-    interpret = not on_tpu()
+    interpret = _interpret_mode(use_kernels)
 
     if use_kernels:
         U_, S_, V_ = _pad_rank(U, S, V)
-        dy2, M = _pad_rows(dy, 8)
-        x2, _ = _pad_rows(x, 8)
         eye = jnp.eye(U_.shape[1], dtype=jnp.float32)
-        bm = _pick(256, dy2.shape[0])
-        dyV = xus(dy2, V_, eye, bm=bm, bk=_pick(512, dy2.shape[1]), interpret=interpret)
-        xU = xus(x2, U_, eye, bm=bm, bk=_pick(512, x2.shape[1]), interpret=interpret)
-        dA = xus(dy2, V_, jnp.transpose(S_).astype(jnp.float32), bm=bm,
-                 bk=_pick(512, dy2.shape[1]), interpret=interpret)  # dy V Sᵀ
-        dx = avt(dA, U_, bm=bm, bn=_pick(256, U_.shape[0]), interpret=interpret)
-        dU = atb(x2, dA, bm=_pick(512, x2.shape[0]), bka=_pick(256, x2.shape[1]),
-                 interpret=interpret)
-        dS = atb(xU, dyV, bm=_pick(512, xU.shape[0]),
-                 bka=_pick(256, xU.shape[1]), interpret=interpret)
-        xUS = xus(x2, U_, S_.astype(jnp.float32), bm=bm,
-                  bk=_pick(512, x2.shape[1]), interpret=interpret)
-        dV = atb(dy2, xUS, bm=_pick(512, dy2.shape[0]),
-                 bka=_pick(256, dy2.shape[1]), interpret=interpret)
+        dyV = _xus(dy, V_, eye, interpret=interpret)
+        xU = _xus(x, U_, eye, interpret=interpret)
+        dA = _xus(dy, V_, jnp.transpose(S_).astype(jnp.float32),
+                  interpret=interpret)  # dy V Sᵀ
+        dx = _avt(dA, U_, interpret=interpret)
+        dU = _atb(x, dA, interpret=interpret)
+        dS = _atb(xU, dyV, interpret=interpret)
+        xUS = _xus(x, U_, S_.astype(jnp.float32), interpret=interpret)
+        dV = _atb(dy, xUS, interpret=interpret)
         R = U.shape[1]
-        return (dx[: x.shape[0]], dU[:, :R], dS[:R, :R], dV[:, :R])
+        return (
+            dx.astype(x.dtype),
+            dU[:, :R].astype(U.dtype),
+            dS[:R, :R].astype(S.dtype),
+            dV[:, :R].astype(V.dtype),
+        )
 
     dyV = dy @ V
     xU = x @ U
@@ -141,7 +234,32 @@ def _bwd(use_kernels, resids, dy):
     dU = x.T @ (dyV @ S.T)
     dS = xU.T @ dyV
     dV = dy.T @ (xU @ S)
-    return (dx, dU, dS, dV)
+    return (
+        dx.astype(x.dtype),
+        dU.astype(U.dtype),
+        dS.astype(S.dtype),
+        dV.astype(V.dtype),
+    )
 
 
 lowrank_apply.defvjp(_fwd, _bwd)
+
+
+def lowrank_apply_nd(x, U, S, V, use_kernels=False) -> jax.Array:
+    """:func:`lowrank_apply` for the shapes model code actually has.
+
+    - ``x`` may carry leading batch dims (``(B, T, d)`` activations): they
+      are flattened into the kernel's M dim and restored on the output.
+    - ``U/S/V`` may carry leading stack dims (scanned layer stacks, MoE
+      experts — the batched :class:`LowRankFactor` buffer layout): the
+      apply is vmapped over the stack axis, matching ``x``'s leading axes.
+    """
+    if U.ndim > 2:
+        return jax.vmap(lowrank_apply_nd, in_axes=(0, 0, 0, 0, None))(
+            x, U, S, V, use_kernels
+        )
+    if x.ndim == 2:
+        return lowrank_apply(x, U, S, V, use_kernels)
+    lead = x.shape[:-1]
+    y = lowrank_apply(x.reshape(-1, x.shape[-1]), U, S, V, use_kernels)
+    return y.reshape(lead + (V.shape[0],))

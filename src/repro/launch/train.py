@@ -75,6 +75,12 @@ def main(argv=None):
         "--weighted", action="store_true",
         help="aggregate with client weights ∝ |X_c| (paper §2 extension)",
     )
+    ap.add_argument(
+        "--kernels", default="auto", choices=["auto", "interpret", "off"],
+        help="low-rank Pallas kernel dispatch: auto = fused kernels on TPU "
+        "(jnp reference elsewhere), interpret = force the Pallas "
+        "interpreter (CPU validation, slow), off = plain jnp chain",
+    )
     ap.add_argument("--rounds", type=int, default=40)
     ap.add_argument("--local-steps", type=int, default=4)
     ap.add_argument("--batch", type=int, default=4)
@@ -89,6 +95,8 @@ def main(argv=None):
         args.preset = None
 
     cfg = build_cfg(args)
+    if args.kernels != cfg.kernels:
+        cfg = dataclasses.replace(cfg, kernels=args.kernels)
     model = build_model(cfg)
     params, _ = model.init(jax.random.PRNGKey(args.seed))
     n_params = sum(x.size for x in jax.tree.leaves(params))

@@ -112,6 +112,14 @@ class ModelConfig:
     remat: bool = True
     attn_q_chunk: int = 1024  # blockwise-attention query chunk (memory bound)
     loss_seq_chunk: int = 0  # 0 → unchunked cross-entropy
+    # Pallas low-rank kernel dispatch for every factorized matmul:
+    #   "auto"      fused xus/avt/atb kernels on TPU without an active GSPMD
+    #               mesh (pallas_call has no SPMD partitioning rule), jnp
+    #               reference elsewhere
+    #   "interpret" force the kernel path through the Pallas interpreter on
+    #               any backend (validation of the TPU path — slow, tests)
+    #   "off"       plain jnp chain (no custom VJP)
+    kernels: str = "auto"
 
     @property
     def hd(self) -> int:

@@ -22,6 +22,7 @@ from repro.core.factorization import (
     is_factor,
     lr_matmul,
 )
+from repro.kernels.ops import lowrank_apply_nd, use_kernels_for
 from repro.models import sharding
 from repro.models.config import LowRankPolicy
 
@@ -127,15 +128,41 @@ class Builder:
 # ---------------------------------------------------------------------------
 
 
-def apply_linear(w, x: Array, *, bias: Optional[Array] = None, dtype=None) -> Array:
-    """``y = x @ W (+ b)`` dispatching on dense vs LowRankFactor leaves."""
+def apply_linear(
+    w,
+    x: Array,
+    *,
+    bias: Optional[Array] = None,
+    dtype=None,
+    kernels: str = "off",
+) -> Array:
+    """``y = x @ W (+ b)`` dispatching on dense vs LowRankFactor leaves.
+
+    ``kernels`` (a :data:`repro.kernels.KERNEL_POLICIES` policy, usually
+    ``ModelConfig.kernels``) routes factor leaves — LowRankFactor *and* the
+    client loop's 2r-wide AugmentedFactor — through the fused Pallas
+    ``xus``/``avt`` chain with the ``atb``-backed custom VJP.  The
+    augmented factors' active-direction masking survives the kernel path
+    unchanged: inactive basis columns and coefficient blocks are exactly
+    zero (factorization.py invariant), so the fused chain equals the
+    masked reference chain.
+    """
     dtype = dtype or x.dtype
     if is_factor(w):
-        # rank-bottleneck chain; never materializes the n_in×n_out matrix
-        y = (
-            jnp.matmul(jnp.matmul(x, w.U.astype(dtype)), w.S.astype(dtype))
-            @ w.V.T.astype(dtype)
-        )
+        if kernels != "off":
+            y = lowrank_apply_nd(
+                x,
+                w.U.astype(dtype),
+                w.S.astype(dtype),
+                w.V.astype(dtype),
+                use_kernels_for(kernels),
+            )
+        else:
+            # rank-bottleneck chain; never materializes the n_in×n_out matrix
+            y = (
+                jnp.matmul(jnp.matmul(x, w.U.astype(dtype)), w.S.astype(dtype))
+                @ w.V.T.astype(dtype)
+            )
     else:
         y = jnp.matmul(x, w.astype(dtype))
     if bias is not None:
@@ -143,16 +170,27 @@ def apply_linear(w, x: Array, *, bias: Optional[Array] = None, dtype=None) -> Ar
     return y
 
 
-def apply_embedding(w, tokens: Array, *, dtype=jnp.float32) -> Array:
+def apply_embedding(w, tokens: Array, *, dtype=jnp.float32, kernels: str = "off") -> Array:
     """Token embedding lookup (gather).
 
     The embedding factor's U is kept *replicated* (it is small once
     factorized: vocab × r), so the gather is local on every shard — a
     one-hot matmul against a vocab-sharded table would materialize a
     (B, T, vocab) temp, which dominated dry-run memory.
+
+    Kernel path: the gathered rows ``u = U[tokens]`` play the activation
+    role of the fused chain with the coefficient as the projection —
+    ``((u S) I) Vᵀ`` — so ``y = u S Vᵀ`` reuses :func:`lowrank_apply_nd`'s
+    custom VJP (dS arrives through the kernel's dU slot).
     """
     if is_factor(w):
         u = jnp.take(w.U, tokens, axis=0).astype(dtype)  # (..., r)
+        if kernels != "off":
+            eye = jnp.eye(w.S.shape[-1], dtype=dtype)
+            return lowrank_apply_nd(
+                u, w.S.astype(dtype), eye, w.V.astype(dtype),
+                use_kernels_for(kernels),
+            )
         return jnp.matmul(u, w.S.astype(dtype)) @ w.V.T.astype(dtype)
     return jnp.take(w, tokens, axis=0).astype(dtype)
 

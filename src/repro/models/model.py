@@ -95,8 +95,8 @@ def _encode(params, frames: Array, cfg: ModelConfig) -> Array:
     return rms_norm(h, params["enc_norm"], cfg.norm_eps)
 
 
-def _logits(params, h: Array) -> Array:
-    logits = apply_linear(params["lm_head"], h)
+def _logits(params, h: Array, kernels: str = "off") -> Array:
+    logits = apply_linear(params["lm_head"], h, kernels=kernels)
     # sequence-sharded logits: CE is elementwise over (B, T), so the whole
     # loss pipeline stays seq-parallel; vocab stays local to the shard.
     return sharding.shard(logits, "batch", "seq", None)
@@ -135,7 +135,7 @@ def build_model(cfg: ModelConfig) -> Model:
         # mismatch).  The first superblock constraint reshards to seq.
         # Lookup directly in compute dtype: the f32 intermediate was
         # all-gathered (1.75 GiB/device on qwen2 train) before the cast.
-        emb = apply_embedding(params["embed"], inputs, dtype=dt)
+        emb = apply_embedding(params["embed"], inputs, dtype=dt, kernels=cfg.kernels)
         emb = sharding.shard(emb, "batch", None, None)
 
         cross_kv = None
@@ -151,7 +151,7 @@ def build_model(cfg: ModelConfig) -> Model:
         positions = jnp.arange(emb.shape[1])
         h, _, aux = _trunk_simple(params, emb, positions, cross_kv)
         h = h[:, n_prefix:]
-        logits = _logits(params, h)
+        logits = _logits(params, h, cfg.kernels)
         return _xent(logits, labels) + aux.astype(jnp.float32)
 
     def _trunk_simple(params, h, positions, cross_kv):
@@ -178,7 +178,9 @@ def build_model(cfg: ModelConfig) -> Model:
         """Process the full prompt; returns (last-token logits, cache)."""
         tokens = batch["tokens"]  # (B, S)
         B, S = tokens.shape
-        emb = apply_embedding(params["embed"], tokens, dtype=jnp.float32).astype(dt)
+        emb = apply_embedding(
+            params["embed"], tokens, dtype=jnp.float32, kernels=cfg.kernels
+        ).astype(dt)
         if cfg.family == "vlm" and "vision_embeds" in batch:
             vis = batch["vision_embeds"].astype(dt)
             emb = jnp.concatenate([vis, emb], axis=1)
@@ -197,13 +199,15 @@ def build_model(cfg: ModelConfig) -> Model:
         h = rms_norm(h, params["final_norm"], cfg.norm_eps)
         cache["stack"] = new_stack
         cache["pos"] = jnp.int32(emb.shape[1])
-        logits = _logits(params, h[:, -1:])[:, 0]
+        logits = _logits(params, h[:, -1:], cfg.kernels)[:, 0]
         return logits, cache
 
     def serve_step(params, cache, tokens):
         """One decode step.  tokens: (B, 1) → (logits (B, vocab), cache)."""
         B = tokens.shape[0]
-        emb = apply_embedding(params["embed"], tokens, dtype=jnp.float32).astype(dt)
+        emb = apply_embedding(
+            params["embed"], tokens, dtype=jnp.float32, kernels=cfg.kernels
+        ).astype(dt)
         pos = cache["pos"]
         positions = pos[None] + jnp.arange(tokens.shape[1])
         cross_kv = cache.get("enc_h") if cfg.is_encdec else None
@@ -217,7 +221,7 @@ def build_model(cfg: ModelConfig) -> Model:
         )
         h = rms_norm(h, params["final_norm"], cfg.norm_eps)
         new_cache = dict(cache, stack=new_stack, pos=pos + tokens.shape[1])
-        logits = _logits(params, h[:, -1:])[:, 0]
+        logits = _logits(params, h[:, -1:], cfg.kernels)[:, 0]
         return logits, new_cache
 
     return Model(

@@ -23,7 +23,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.factorization import is_factor
+from repro.core.factorization import is_factor, lr_matmul
 from repro.models import sharding
 from repro.models.config import ModelConfig, MoEConfig
 from repro.models.layers import Builder
@@ -57,17 +57,26 @@ def build_moe(b: Builder, prefix: str, cfg: ModelConfig, n_blocks: int):
                  batch_shape=(n_blocks,), batch_axes=("layers",))
 
 
-def _stacked_linear(w, x: Array) -> Array:
-    """x: (E, cap, n_in) through stacked (E, n_in, n_out) dense or factor."""
+def _stacked_linear(w, x: Array, kernels: str = "off") -> Array:
+    """x: (E, cap, n_in) through stacked (E, n_in, n_out) dense or factor.
+
+    Factor leaves under a kernel policy go through
+    :func:`repro.kernels.lowrank_apply_nd`, which vmaps the fused chain
+    over the stacked expert axis (expert-wise grids on TPU).
+    """
     if is_factor(w):
+        if kernels != "off":
+            return lr_matmul(x, w, kernels=kernels)
         h = jnp.einsum("ecd,edr->ecr", x, w.U.astype(x.dtype))
         h = jnp.einsum("ecr,ers->ecs", h, w.S.astype(x.dtype))
         return jnp.einsum("ecs,efs->ecf", h, w.V.astype(x.dtype))
     return jnp.einsum("ecd,edf->ecf", x, w.astype(x.dtype))
 
 
-def _dense_linear(w, x: Array) -> Array:
+def _dense_linear(w, x: Array, kernels: str = "off") -> Array:
     if is_factor(w):
+        if kernels != "off":
+            return lr_matmul(x, w, kernels=kernels)
         h = (x @ w.U.astype(x.dtype)) @ w.S.astype(x.dtype)
         return h @ w.V.T.astype(x.dtype)
     return x @ w.astype(x.dtype)
@@ -121,10 +130,14 @@ def moe_block(p: dict, x: Array, cfg: ModelConfig) -> Tuple[Array, Array]:
     # layout — propagation alone loses it through the dot_general reshapes
     # and replicates multi-GiB expert activations on every device
     xe = sharding.shard(xe, "experts", None, None)
-    gate_h = sharding.shard(_stacked_linear(p["gate"], xe), "experts", None, None)
-    up_h = sharding.shard(_stacked_linear(p["up"], xe), "experts", None, None)
+    gate_h = sharding.shard(
+        _stacked_linear(p["gate"], xe, cfg.kernels), "experts", None, None
+    )
+    up_h = sharding.shard(
+        _stacked_linear(p["up"], xe, cfg.kernels), "experts", None, None
+    )
     h = jax.nn.silu(gate_h) * up_h
-    ye = _stacked_linear(p["down"], h)  # (E, cap, d)
+    ye = _stacked_linear(p["down"], h, cfg.kernels)  # (E, cap, d)
     ye = sharding.shard(ye, "experts", None, None)
     ye = ye * w_taken.T[..., None].astype(ye.dtype)
 
@@ -133,10 +146,10 @@ def moe_block(p: dict, x: Array, cfg: ModelConfig) -> Tuple[Array, Array]:
 
     # shared ("always-on") experts — DeepSeekMoE fine-grained design
     if "shared_up" in p:
-        hs = jax.nn.silu(_dense_linear(p["shared_gate"], xf)) * _dense_linear(
-            p["shared_up"], xf
-        )
-        out = out + _dense_linear(p["shared_down"], hs)
+        hs = jax.nn.silu(
+            _dense_linear(p["shared_gate"], xf, cfg.kernels)
+        ) * _dense_linear(p["shared_up"], xf, cfg.kernels)
+        out = out + _dense_linear(p["shared_down"], hs, cfg.kernels)
 
     # switch-style load-balance auxiliary loss
     frac_routed = jnp.mean((chose > 0).astype(jnp.float32), axis=0)  # (E,)

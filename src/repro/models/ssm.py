@@ -146,18 +146,20 @@ def mamba_mix(
     d_inner, dt_rank, d_state, d_conv = mamba_dims(cfg)
     dt = x.dtype
 
-    xz = apply_linear(p["in_x"], x)
-    z = apply_linear(p["in_z"], x)
+    xz = apply_linear(p["in_x"], x, kernels=cfg.kernels)
+    z = apply_linear(p["in_z"], x, kernels=cfg.kernels)
     xz = sharding.shard(xz, "batch", None, "mamba_inner")
 
     tail = state["conv"] if state is not None else None
     xc, new_tail = _causal_conv(xz, p["conv_w"].astype(dt), tail)
     xc = jax.nn.silu(xc)
 
-    proj = apply_linear(p["x_proj"], xc).astype(jnp.float32)
+    proj = apply_linear(p["x_proj"], xc, kernels=cfg.kernels).astype(jnp.float32)
     dt_low, Bp, Cp = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
     delta = jax.nn.softplus(
-        apply_linear(p["dt_proj"], dt_low.astype(dt), bias=p["dt_bias"]).astype(
+        apply_linear(
+            p["dt_proj"], dt_low.astype(dt), bias=p["dt_bias"], kernels=cfg.kernels
+        ).astype(
             jnp.float32
         )
     )  # (B,T,d_inner) — keep channel-sharded (unpinned it replicates, f32)
@@ -216,7 +218,7 @@ def mamba_mix(
 
     y = y + p["D"].astype(jnp.float32) * xc32
     y = (y.astype(dt)) * jax.nn.silu(z)
-    out = apply_linear(p["out"], y)
+    out = apply_linear(p["out"], y, kernels=cfg.kernels)
     return out, new_state
 
 
@@ -344,10 +346,10 @@ def rwkv_mix(
     def mix(mu):
         return x + (xx - x) * mu.astype(dt)
 
-    r = apply_linear(p["r"], mix(p["mu_r"])).reshape(B, T, H, hd)
-    k = apply_linear(p["k"], mix(p["mu_k"])).reshape(B, T, H, hd)
-    v = apply_linear(p["v"], mix(p["mu_v"])).reshape(B, T, H, hd)
-    g = apply_linear(p["g"], mix(p["mu_g"]))
+    r = apply_linear(p["r"], mix(p["mu_r"]), kernels=cfg.kernels).reshape(B, T, H, hd)
+    k = apply_linear(p["k"], mix(p["mu_k"]), kernels=cfg.kernels).reshape(B, T, H, hd)
+    v = apply_linear(p["v"], mix(p["mu_v"]), kernels=cfg.kernels).reshape(B, T, H, hd)
+    g = apply_linear(p["g"], mix(p["mu_g"]), kernels=cfg.kernels)
 
     # data-dependent decay (Finch): w = exp(-exp(w0 + tanh(x A) B))
     xw = mix(p["mu_w"]).astype(jnp.float32)
@@ -371,7 +373,7 @@ def rwkv_mix(
     o = o.reshape(B, T, d)
     o = rms_norm(o, p["ln_x"], cfg.norm_eps).astype(dt)
     o = o * jax.nn.silu(g)
-    out = apply_linear(p["out"], o)
+    out = apply_linear(p["out"], o, kernels=cfg.kernels)
     new_state = {"S": S_T, "shift": last} if state is not None else None
     return out, new_state
 

@@ -125,9 +125,9 @@ def attn_mix(
     """
     B, T, d = x.shape
     H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
-    q = apply_linear(p["q"], x, bias=p.get("q_b")).reshape(B, T, H, hd)
-    k = apply_linear(p["k"], x, bias=p.get("k_b")).reshape(B, T, Hkv, hd)
-    v = apply_linear(p["v"], x, bias=p.get("v_b")).reshape(B, T, Hkv, hd)
+    q = apply_linear(p["q"], x, bias=p.get("q_b"), kernels=cfg.kernels).reshape(B, T, H, hd)
+    k = apply_linear(p["k"], x, bias=p.get("k_b"), kernels=cfg.kernels).reshape(B, T, Hkv, hd)
+    v = apply_linear(p["v"], x, bias=p.get("v_b"), kernels=cfg.kernels).reshape(B, T, Hkv, hd)
     if cfg.qk_norm:
         q = rms_norm(q, p["q_norm"], cfg.norm_eps)
         k = rms_norm(k, p["k_norm"], cfg.norm_eps)
@@ -172,32 +172,34 @@ def attn_mix(
         )
 
     y = sharding.shard(y, "batch", "seq", None, None)
-    out = apply_linear(p["o"], y.reshape(B, T, H * hd))
+    out = apply_linear(p["o"], y.reshape(B, T, H * hd), kernels=cfg.kernels)
 
     if cross_kv is not None:
         # cross_kv: encoder hidden states (B, Tenc, d)
         xh = rms_norm(x + out, p["ln_x"], cfg.norm_eps)
-        qx = apply_linear(p["xq"], xh).reshape(B, T, H, hd)
+        qx = apply_linear(p["xq"], xh, kernels=cfg.kernels).reshape(B, T, H, hd)
         Tenc = cross_kv.shape[1]
-        ek = apply_linear(p["xk"], cross_kv).reshape(B, Tenc, Hkv, hd)
-        ev = apply_linear(p["xv"], cross_kv).reshape(B, Tenc, Hkv, hd)
+        ek = apply_linear(p["xk"], cross_kv, kernels=cfg.kernels).reshape(B, Tenc, Hkv, hd)
+        ev = apply_linear(p["xv"], cross_kv, kernels=cfg.kernels).reshape(B, Tenc, Hkv, hd)
         yx = attention(
             qx, ek, ev,
             q_positions=positions,
             kv_positions=jnp.arange(Tenc),
             causal=False, sliding_window=0, q_chunk=cfg.attn_q_chunk,
         )
-        out = out + apply_linear(p["xo"], yx.reshape(B, T, H * hd))
+        out = out + apply_linear(p["xo"], yx.reshape(B, T, H * hd), kernels=cfg.kernels)
     return out, new_cache
 
 
 def mlp_apply(p: dict, x: Array, cfg: ModelConfig) -> Array:
     if cfg.gated_mlp:
-        h = jax.nn.silu(apply_linear(p["gate"], x)) * apply_linear(p["up"], x)
+        h = jax.nn.silu(
+            apply_linear(p["gate"], x, kernels=cfg.kernels)
+        ) * apply_linear(p["up"], x, kernels=cfg.kernels)
     else:
-        h = jax.nn.gelu(apply_linear(p["up"], x))
+        h = jax.nn.gelu(apply_linear(p["up"], x, kernels=cfg.kernels))
     h = sharding.shard(h, "batch", "seq", None)
-    return apply_linear(p["down"], h)
+    return apply_linear(p["down"], h, kernels=cfg.kernels)
 
 
 def block_apply(

@@ -1,4 +1,6 @@
 """Cost-model unit tests (paper Table 1 / Fig. 3)."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
@@ -43,6 +45,76 @@ def test_client_flops_scale_linearly_in_n():
     a = cm.client_flops_per_local_step({"w": f1}, batch_tokens=32)
     b = cm.client_flops_per_local_step({"w": f2}, batch_tokens=32)
     assert 1.8 < b / a < 2.2
+
+
+def _at_rank(f, r):
+    return dataclasses.replace(f, rank=jnp.float32(r))
+
+
+def test_effective_comm_equals_static_at_full_rank():
+    """With rank == r_max the effective-rank counter must reproduce the
+    static bound exactly, for every correction mode."""
+    f = init_factor(jax.random.PRNGKey(0), 100, 60, r_max=8, init_rank=8)
+    params = {"w": f, "b": jnp.zeros((60,))}
+    for corr in ("none", "simplified", "full"):
+        assert float(
+            cm.fedlrt_round_comm_bytes_effective(params, corr)
+        ) == cm.fedlrt_round_comm_bytes(params, corr)
+
+
+def test_effective_comm_monotone_as_truncation_shrinks_rank():
+    """Reported comm must actually shrink as the adaptive rank drops —
+    the bug was pricing every round at r_max forever."""
+    f = init_factor(jax.random.PRNGKey(1), 128, 96, r_max=16, init_rank=16)
+    static = cm.fedlrt_round_comm_bytes({"w": f}, "simplified")
+    vals = [
+        float(cm.fedlrt_round_comm_bytes_effective({"w": _at_rank(f, r)}))
+        for r in (16, 12, 8, 4, 1)
+    ]
+    assert vals[0] == static
+    assert all(a > b for a, b in zip(vals, vals[1:]))
+    assert all(v <= static for v in vals)
+
+
+def test_effective_comm_stacked_factor_sums_slices():
+    """Batched (layer-stacked) factors price every slice; per-slice ranks
+    contribute independently and stay below the static stacked bound."""
+    f = init_factor(
+        jax.random.PRNGKey(2), 64, 64, r_max=8, init_rank=8, batch_shape=(3,)
+    )
+    static = cm.fedlrt_round_comm_bytes({"w": f}, "simplified")
+    assert float(cm.fedlrt_round_comm_bytes_effective({"w": f})) == static
+    f_mixed = dataclasses.replace(f, rank=jnp.asarray([8.0, 4.0, 2.0]))
+    eff = float(cm.fedlrt_round_comm_bytes_effective({"w": f_mixed}))
+    assert eff < static
+    # equals the sum of three single-slice factors at those ranks
+    singles = sum(
+        float(
+            cm.fedlrt_round_comm_bytes_effective(
+                {
+                    "w": dataclasses.replace(
+                        f_mixed,
+                        U=f.U[i], S=f.S[i], V=f.V[i],
+                        rank=f_mixed.rank[i],
+                    )
+                }
+            )
+        )
+        for i in range(3)
+    )
+    assert eff == singles
+
+
+def test_effective_comm_traces_under_jit():
+    f = init_factor(jax.random.PRNGKey(3), 64, 48, r_max=8, init_rank=6)
+
+    @jax.jit
+    def eff(params):
+        return cm.fedlrt_round_comm_bytes_effective(params)
+
+    assert float(eff({"w": f})) == float(
+        cm.fedlrt_round_comm_bytes_effective({"w": f})
+    )
 
 
 def test_round_total_comm_scales_with_cohort():

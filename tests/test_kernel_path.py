@@ -1,0 +1,204 @@
+"""End-to-end Pallas kernel-path equivalence (ModelConfig.kernels).
+
+The fused ``xus``/``avt``/``atb`` chain must be a drop-in for the jnp
+reference everywhere it is dispatched: ``kernels="interpret"`` runs the
+*kernel* code path through the Pallas interpreter on CPU, so these tests
+pin kernel-path ≡ reference-path through a **full fedlrt_round** — client
+basis gradients, the s*-step AugmentedFactor client loop (2r active-
+direction masking), aggregation, truncation, metrics — not just a single
+matmul.  Includes the bf16 sublane case ``M % 16 == 8`` that used to
+produce misaligned tiles.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FedConfig, fedlrt_round, init_factor
+from repro.core.factorization import is_factor, lr_matmul, materialize
+from repro.data import make_classification_data, partition_iid
+from repro.models import build_model
+from repro.models.config import LowRankPolicy, ModelConfig
+from repro.models.moe import _stacked_linear
+
+C, DIM, NCLS = 4, 32, 4
+
+
+def _loss(kernels):
+    def loss_fn(f, batch):
+        logits = lr_matmul(batch["x"], f, kernels=kernels)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, batch["y"][:, None], -1))
+
+    return loss_fn
+
+
+def _client_batches(seed=0):
+    x, y = make_classification_data(
+        dim=DIM, num_classes=NCLS, rank=3, num_points=512, noise=0.2, seed=seed
+    )
+    parts = partition_iid(len(x), C, seed=seed)
+    xb = np.stack([x[p[:64]] for p in parts])
+    yb = np.stack([y[p[:64]] for p in parts])
+    return {"x": jnp.asarray(xb), "y": jnp.asarray(yb)}
+
+
+def _tree_close(a, b, atol):
+    jax.tree.map(
+        lambda u, v: np.testing.assert_allclose(
+            np.asarray(u, np.float32), np.asarray(v, np.float32), atol=atol
+        ),
+        a,
+        b,
+    )
+
+
+@pytest.mark.parametrize("correction", ["simplified", "full"])
+def test_fedlrt_round_kernel_path_matches_reference(correction):
+    """One full FeDLRT round through the interpret-mode kernels equals the
+    reference round: params, losses, and every metric to 1e-4."""
+    f = init_factor(jax.random.PRNGKey(0), DIM, NCLS, r_max=8, init_rank=8)
+    batch = _client_batches()
+    cfg = FedConfig(
+        num_clients=C, s_star=3, lr=0.05, correction=correction, tau=0.05,
+        eval_after=True,
+    )
+    p_ref, m_ref = jax.jit(
+        lambda f, b: fedlrt_round(_loss("off"), f, b, cfg)
+    )(f, batch)
+    p_ker, m_ker = jax.jit(
+        lambda f, b: fedlrt_round(_loss("interpret"), f, b, cfg)
+    )(f, batch)
+    _tree_close(p_ref, p_ker, 1e-4)
+    assert set(m_ref) == set(m_ker)
+    _tree_close(m_ref, m_ker, 1e-4)
+
+
+def _model_cfg(**overrides):
+    base = dict(
+        name="kernel-path-tiny", family="dense", num_layers=2, d_model=64,
+        num_heads=2, num_kv_heads=2, d_ff=96, vocab_size=64,
+        compute_dtype="float32", param_dtype="float32", attn_q_chunk=16,
+        rope_theta=1e4,
+        lowrank=LowRankPolicy(min_dim=32, rank_frac=0.25, r_cap=16),
+    )
+    base.update(overrides)
+    return ModelConfig(**base)
+
+
+def test_model_loss_and_grads_kernel_path_bitwise_f32():
+    """Model forward/backward: interpret-mode kernels vs reference, through
+    embedding, attention, MLP, and lm_head factor dispatch."""
+    cfg_ref = _model_cfg(kernels="off")
+    cfg_ker = _model_cfg(kernels="interpret")
+    m_ref, m_ker = build_model(cfg_ref), build_model(cfg_ker)
+    params, _ = m_ref.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 17), 0, 64)}
+    l_ref = m_ref.loss_fn(params, batch)
+    l_ker = m_ker.loss_fn(params, batch)
+    np.testing.assert_allclose(float(l_ref), float(l_ker), atol=1e-5)
+    g_ref = jax.grad(m_ref.loss_fn)(params, batch)
+    g_ker = jax.grad(m_ker.loss_fn)(params, batch)
+    _tree_close(g_ref, g_ker, 1e-5)
+
+
+@pytest.mark.slow
+def test_model_fedlrt_round_kernel_path_matches_reference():
+    """Full fedlrt_round over a real (tiny) transformer: the client
+    local_sgd_scan's forward/backward runs through xus/avt/atb on
+    AugmentedFactor leaves and must reproduce the reference round."""
+    cfg_ref = _model_cfg(kernels="off")
+    cfg_ker = _model_cfg(kernels="interpret")
+    m_ref, m_ker = build_model(cfg_ref), build_model(cfg_ker)
+    params, _ = m_ref.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (C, 2, 17), 0, 64)
+    batch = {"tokens": tokens}
+    fc = FedConfig(
+        num_clients=C, s_star=2, lr=0.05, correction="simplified", tau=0.05,
+        eval_after=True,
+    )
+    p_ref, met_ref = jax.jit(
+        lambda p, b: fedlrt_round(m_ref.loss_fn, p, b, fc)
+    )(params, batch)
+    p_ker, met_ker = jax.jit(
+        lambda p, b: fedlrt_round(m_ker.loss_fn, p, b, fc)
+    )(params, batch)
+    _tree_close(p_ref, p_ker, 1e-4)
+    _tree_close(met_ref, met_ker, 1e-4)
+
+
+@pytest.mark.slow
+def test_model_fedlrt_round_bf16_sublane_case():
+    """bf16 with per-client M = B·T ≡ 8 (mod 16) — the misaligned-tile
+    regression: the round must run through the dtype-aware padding and
+    stay close to the reference path (bf16 rounding differs between the
+    fused f32-accumulating kernels and the per-op bf16 reference)."""
+    cfg_ref = _model_cfg(kernels="off", compute_dtype="bfloat16")
+    cfg_ker = _model_cfg(kernels="interpret", compute_dtype="bfloat16")
+    m_ref, m_ker = build_model(cfg_ref), build_model(cfg_ker)
+    params, _ = m_ref.init(jax.random.PRNGKey(0))
+    # B=1, T=24 tokens per client ⇒ M = 24, 24 % 16 == 8
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (C, 1, 25), 0, 64)
+    batch = {"tokens": tokens}
+    fc = FedConfig(
+        num_clients=C, s_star=2, lr=0.05, correction="simplified", tau=0.05,
+        eval_after=True,
+    )
+    p_ref, met_ref = jax.jit(
+        lambda p, b: fedlrt_round(m_ref.loss_fn, p, b, fc)
+    )(params, batch)
+    p_ker, met_ker = jax.jit(
+        lambda p, b: fedlrt_round(m_ker.loss_fn, p, b, fc)
+    )(params, batch)
+    assert np.isfinite(float(met_ker["loss_before"]))
+    np.testing.assert_allclose(
+        float(met_ref["loss_before"]), float(met_ker["loss_before"]), atol=5e-2
+    )
+    np.testing.assert_allclose(
+        float(met_ref["loss_after"]), float(met_ker["loss_after"]), atol=5e-2
+    )
+    # compare the *represented weights*: basis columns are only defined up
+    # to rotation, and orthonormalization amplifies bf16 rounding
+    # differences into O(1) direction changes of near-null columns while
+    # W = U S Vᵀ stays put
+    w_ref = jax.tree.map(
+        lambda f: materialize(f) if is_factor(f) else f, p_ref, is_leaf=is_factor
+    )
+    w_ker = jax.tree.map(
+        lambda f: materialize(f) if is_factor(f) else f, p_ker, is_leaf=is_factor
+    )
+    _tree_close(w_ref, w_ker, 7e-2)
+
+
+def test_stacked_expert_factors_kernel_path():
+    """MoE-style stacked factors: the kernel path vmaps over the expert
+    axis and must match the einsum reference, forward and backward."""
+    E, cap, d, dff = 3, 24, 32, 48
+    w = init_factor(
+        jax.random.PRNGKey(4), d, dff, r_max=8, init_rank=8, batch_shape=(E,)
+    )
+    x = jax.random.normal(jax.random.PRNGKey(5), (E, cap, d))
+    y_ref = _stacked_linear(w, x, "off")
+    y_ker = _stacked_linear(w, x, "interpret")
+    np.testing.assert_allclose(
+        np.asarray(y_ref), np.asarray(y_ker), rtol=1e-5, atol=1e-5
+    )
+
+    def loss(kernels):
+        def f(US):
+            w2 = dataclasses.replace(w, U=US[0], S=US[1])
+            return jnp.sum(_stacked_linear(w2, x, kernels) ** 2)
+
+        return jax.grad(f)((w.U, w.S))
+
+    g_ref, g_ker = loss("off"), loss("interpret")
+    _tree_close(g_ref, g_ker, 1e-3)
+
+
+def test_kernel_policy_validation():
+    with pytest.raises(ValueError, match="kernels policy"):
+        from repro.kernels import use_kernels_for
+
+        use_kernels_for("bogus")

@@ -146,6 +146,20 @@ def test_partial_cohort_runs_and_comm_scales_with_cohort():
 
 
 def test_per_cohort_jit_cache_one_executable_per_size():
+    """Static-cohort policies compile one executable per distinct size."""
+    f, cfg, batcher = _setup()
+    eng = FederatedEngine(
+        _loss, f, cfg, method="fedlrt",
+        participation=Participation(mode="uniform", cohort_size=2, seed=2),
+        donate=False,
+    )
+    hist = eng.train(batcher, 6, log_every=0)
+    assert set(eng._step_cache.keys()) == {(2, False)}
+
+
+def test_dropout_cohort_padding_single_executable():
+    """dropout's fluctuating cohorts are padded to the population size with
+    zero-weight filler clients: one executable for the whole run."""
     f, cfg, batcher = _setup()
     eng = FederatedEngine(
         _loss, f, cfg, method="fedlrt",
@@ -154,7 +168,44 @@ def test_per_cohort_jit_cache_one_executable_per_size():
     )
     hist = eng.train(batcher, 6, log_every=0)
     sizes = {r.cohort_size for r in hist}
-    assert set(eng._step_cache.keys()) == sizes
+    assert len(sizes) > 1  # cohorts actually fluctuated …
+    assert set(eng._step_cache.keys()) == {(C, True)}  # … one executable
+    assert np.isfinite([r.loss_before for r in hist]).all()
+
+
+def test_cohort_padding_matches_unpadded_round():
+    """A padded round (zero-weight repeats) must equal the same cohort run
+    unpadded — padding is mathematically inert."""
+    f, cfg, _ = _setup()
+    x, y = make_classification_data(
+        dim=DIM, num_classes=NCLS, rank=3, num_points=1024, noise=0.2, seed=0
+    )
+    parts = partition_iid(len(x), C, seed=0)
+    batch = FederatedBatcher(
+        {"x": x, "y": y}, parts, batch_size=16, seed=0
+    ).next_round([1, 3])
+    batch = jax.tree.map(jnp.asarray, batch)
+
+    eng_pad = FederatedEngine(
+        _loss, f, cfg, method="fedlrt",
+        participation=Participation(mode="dropout", dropout_prob=0.5, seed=0),
+        donate=False,
+    )
+    res_pad = eng_pad.run_round(batch, cohort=[1, 3])
+    eng_ref = FederatedEngine(_loss, f, cfg, method="fedlrt", donate=False)
+    res_ref = eng_ref.run_round(batch, cohort=[1, 3])
+
+    assert res_pad.cohort_size == res_ref.cohort_size == 2
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=1e-5
+        ),
+        eng_pad.params,
+        eng_ref.params,
+    )
+    np.testing.assert_allclose(res_pad.loss_before, res_ref.loss_before, atol=1e-6)
+    # comm accounting stays at the true active-cohort size
+    assert eng_pad.comm_total_bytes() == eng_ref.comm_total_bytes()
 
 
 def test_engine_weighted_uniform_weights_match_unweighted():
