@@ -1,0 +1,95 @@
+"""Wire-codec benchmark: bytes saved vs accuracy delta vs round wall-clock.
+
+Runs the fig5-style CV proxy (FeDLRT simplified on the factorized MLP
+head, non-iid Dirichlet split) once per wire codec and reports, relative
+to the ``identity`` baseline:
+
+- measured uplink / downlink MB (per client, summed over rounds),
+- the uplink compression ratio (identity ÷ codec — the paper-facing
+  number: ``int8_affine`` should clear 3×),
+- final-accuracy delta, and
+- mean per-round wall-clock (codec encode/decode rides inside the jitted
+  round, so this shows the compression compute cost, not just bytes).
+
+Emitted as ``wire_<codec>,us_per_round,derived`` CSV rows like every other
+benchmark in this harness.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FedConfig, init_factor
+from repro.data import FederatedBatcher, make_classification_data, partition_dirichlet
+from repro.fed import FederatedEngine
+
+DIM, CLASSES, HID = 64, 10, 256
+
+CODECS = ("identity", "downcast", "downcast:float16", "int8_affine", "topk_rank")
+
+
+def _init(key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": init_factor(k1, DIM, HID, r_max=24, init_rank=24),
+        "b1": jnp.zeros((HID,)),
+        "w2": 0.06 * jax.random.normal(k2, (HID, CLASSES)),
+        "b2": jnp.zeros((CLASSES,)),
+    }
+
+
+def _fwd(p, x):
+    h = ((x @ p["w1"].U) @ p["w1"].S) @ p["w1"].V.T
+    h = jax.nn.relu(h + p["b1"])
+    return h @ p["w2"] + p["b2"]
+
+
+def _loss(p, batch):
+    logp = jax.nn.log_softmax(_fwd(p, batch["x"]))
+    return -jnp.mean(jnp.take_along_axis(logp, batch["y"][:, None], -1))
+
+
+def _run_one(codec: str, rounds: int, C: int, x, y, xt, yt):
+    parts = partition_dirichlet(y, C, alpha=0.3, seed=0)
+    batcher = FederatedBatcher({"x": x, "y": y}, parts, batch_size=64, seed=0)
+    cfg = FedConfig(
+        num_clients=C, s_star=max(240 // C, 1), lr=5e-2, tau=0.03,
+        correction="simplified", eval_after=False,
+    )
+    eng = FederatedEngine(
+        _loss, _init(jax.random.PRNGKey(0)), cfg,
+        method="fedlrt", wire_codec=codec,
+    )
+    t0 = time.perf_counter()
+    hist = eng.train(batcher, rounds, log_every=0)
+    us = (time.perf_counter() - t0) / rounds * 1e6
+    acc = float(jnp.mean(jnp.argmax(_fwd(eng.params, xt), -1) == yt))
+    up = sum(r.wire_bytes_up_per_client * r.cohort_size for r in hist)
+    down = sum(r.wire_bytes_down_per_client * r.cohort_size for r in hist)
+    return acc, up, down, us
+
+
+def wire_codecs(rounds: int = 25, C: int = 4, emit=print):
+    x, y = make_classification_data(
+        dim=DIM, num_classes=CLASSES, rank=6, num_points=10_240, noise=0.3, seed=0
+    )
+    xt, yt = jnp.asarray(x[-2048:]), jnp.asarray(y[-2048:])
+    x, y = x[:-2048], y[:-2048]
+
+    results = {}
+    base_acc = base_up = None
+    for codec in CODECS:
+        acc, up, down, us = _run_one(codec, rounds, C, x, y, xt, yt)
+        if base_acc is None:
+            base_acc, base_up = acc, up
+        results[codec] = (acc, up, down, us)
+        emit(
+            f"wire_{codec.replace(':', '_')},{us:.1f},"
+            f"acc={acc:.4f};d_acc={acc - base_acc:+.4f};"
+            f"up_MB={up/1e6:.3f};down_MB={down/1e6:.3f};"
+            f"up_save={np.divide(base_up, up):.2f}x"
+        )
+    return results

@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   fig3_*       communication/compute scaling + amortization point
   table1_*     measured vs analytic per-round communication
   fig5_*       CV proxy: accuracy vs client count, non-iid
+  wire_*       wire codecs: measured bytes saved vs accuracy vs wall-clock
   kernel_*     low-rank chain vs dense matmul + Pallas interpret check
   roofline_*   dry-run roofline terms (requires results/dryrun/*.json)
 
@@ -22,7 +23,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true", help="fewer rounds")
     ap.add_argument(
         "--only", type=str, default=None,
-        help="comma-separated subset: lsq,costs,cv,kernels,roofline",
+        help="comma-separated subset: lsq,costs,cv,wire,kernels,roofline",
     )
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
@@ -47,6 +48,10 @@ def main() -> None:
 
         fig5_proxy(rounds=10 if q else 25, clients=(2, 4) if q else (2, 4, 8))
         fig5_partial(rounds=10 if q else 25, C=8, cohorts=(8, 4) if q else (8, 4, 2))
+    if want("wire"):
+        from benchmarks.bench_wire import wire_codecs
+
+        wire_codecs(rounds=10 if q else 25)
     if want("kernels"):
         from benchmarks.bench_kernels import chain_vs_dense
 

@@ -12,9 +12,15 @@ participation is a flag away: ``--participation uniform:2`` samples a
 2-client cohort per round (comm totals then scale with the active cohort,
 not the population).
 
+Comm totals are *measured* through the engine's wire layer
+(:mod:`repro.fed.wire`); ``--wire-codec int8_affine`` quantizes every
+payload on the wire and the comm column shrinks accordingly.
+
 Run:  PYTHONPATH=src python examples/federated_vision.py [--clients 2 4 8]
       PYTHONPATH=src python examples/federated_vision.py \
           --clients 8 --participation uniform:4
+      PYTHONPATH=src python examples/federated_vision.py \
+          --clients 4 --wire-codec int8_affine
 """
 import argparse
 
@@ -77,7 +83,7 @@ def accuracy(p, x, y, kernels="off"):
 
 
 def run(method, C, rounds, x, y, xt, yt, seed=0, participation=None,
-        weighted=False, kernels="off"):
+        weighted=False, kernels="off", wire_codec="identity"):
     parts = partition_dirichlet(y, C, alpha=0.3, seed=seed)
     s_star = max(240 // C, 1)
     batcher = FederatedBatcher(
@@ -94,6 +100,7 @@ def run(method, C, rounds, x, y, xt, yt, seed=0, participation=None,
         method="fedlrt" if lowrank else method,
         participation=participation,
         client_weights=partition_sizes(parts) if weighted else None,
+        wire_codec=wire_codec,
     )
     hist = eng.train(batcher, rounds, log_every=0)
     acc = accuracy(eng.params, xt, yt, kernels)
@@ -116,6 +123,10 @@ def main():
                     choices=["auto", "interpret", "off"],
                     help="Pallas low-rank kernel dispatch for the factorized "
                     "layer (auto = TPU only; interpret = CPU validation)")
+    ap.add_argument("--wire-codec", default="identity",
+                    help="on-the-wire payload codec: identity | "
+                    "downcast[:dtype] | int8_affine | topk_rank; the comm "
+                    "column reports bytes *measured* through it")
     args = ap.parse_args()
 
     x, y = make_classification_data(
@@ -125,7 +136,7 @@ def main():
     x, y = x[:-2048], y[:-2048]
 
     participation = Participation.from_spec(args.participation)
-    print(f"participation={args.participation}")
+    print(f"participation={args.participation} wire_codec={args.wire_codec}")
     print(f"{'method':>18} | " + " | ".join(f"C={c}" for c in args.clients))
     for method in ("fedavg", "fedlin", "fedlrt:none", "fedlrt:simplified"):
         cells = []
@@ -133,7 +144,7 @@ def main():
             acc, comm, rank, mean_cohort = run(
                 method, C, args.rounds, x, y, xt, yt,
                 participation=participation, weighted=args.weighted,
-                kernels=args.kernels,
+                kernels=args.kernels, wire_codec=args.wire_codec,
             )
             cells.append(
                 f"acc={acc:.3f} comm={comm/1e6:5.1f}MB "

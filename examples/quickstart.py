@@ -6,6 +6,10 @@ Fig. 4 — FeDLRT identifies the planted rank (4) within a few aggregation
 rounds, never underestimates it, and converges to the global minimizer.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+
+(For the engine-level drivers — with measured on-the-wire compression via
+``--wire-codec identity|downcast|int8_affine|topk_rank`` — see
+``repro.launch.train`` and ``examples/federated_vision.py``.)
 """
 import jax
 import jax.numpy as jnp

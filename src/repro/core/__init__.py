@@ -10,12 +10,14 @@ from repro.core.factorization import (  # noqa: F401
     materialize,
 )
 from repro.core.round import (  # noqa: F401
+    SERVER,
     FedConfig,
     RoundContext,
     RoundProgram,
     local_sgd_scan,
     make_aggregator,
     run_round,
+    split_server,
     variance_correction,
 )
 from repro.core.fedlrt import FedLRTProgram, fedlrt_round, make_fedlrt_step  # noqa: F401

@@ -32,6 +32,7 @@ from repro.core.factorization import (
     rank_mask,
 )
 from repro.core.round import (
+    SERVER,
     FedConfig,
     RoundContext,
     first_step_batch,
@@ -65,15 +66,13 @@ class _DenseProgram:
             corr_c = variance_correction(ctx.aggregate(g_c), g_c)
         else:
             losses = ctx.vmap_c(loss_fn, in_axes=(None, 0))(params, first)
-            corr_c = jax.tree.map(
-                lambda t: jnp.zeros((ctx.cfg.num_clients,) + t.shape, t.dtype), params
-            )
+            corr_c = None  # FedAvg sends no per-client correction
+        # downlink: the global weights; loss metric stays server-side
         shared = {
             "params0": params,
             # ctx.aggregate, not jnp.mean: consistent with the weighted
             # parameter aggregation (and spmd_axis_name under sharding)
-            "loss_before": ctx.aggregate(losses),
-            "first": first,
+            SERVER: {"loss_before": ctx.aggregate(losses)},
         }
         return shared, corr_c
 
@@ -87,14 +86,15 @@ class _DenseProgram:
     def finalize(self, loss_fn, params, shared, agg, client_batches, ctx: RoundContext):
         new_params = agg
         metrics = {
-            "loss_before": shared["loss_before"],
+            "loss_before": shared[SERVER]["loss_before"],
             "comm_bytes_per_client": jnp.float32(
                 cost_model.dense_round_comm_bytes(params, self.method)
             ),
         }
         if ctx.cfg.eval_after:
+            first = first_step_batch(client_batches, ctx.cfg)
             metrics["loss_after"] = ctx.aggregate(
-                ctx.vmap_c(loss_fn, in_axes=(None, 0))(new_params, shared["first"])
+                ctx.vmap_c(loss_fn, in_axes=(None, 0))(new_params, first)
             )
         return new_params, metrics
 
@@ -124,11 +124,12 @@ def fedavg_round(
     *,
     round_idx: Array | int = 0,
     client_weights: Optional[Array] = None,
+    wire=None,
 ):
     """Algorithm 3: local SGD, aggregate by averaging."""
     return run_round(
         FedAvgProgram(), loss_fn, params, client_batches, cfg,
-        round_idx=round_idx, client_weights=client_weights,
+        round_idx=round_idx, client_weights=client_weights, wire=wire,
     )
 
 
@@ -140,11 +141,12 @@ def fedlin_round(
     *,
     round_idx: Array | int = 0,
     client_weights: Optional[Array] = None,
+    wire=None,
 ):
     """Algorithm 4: FedAvg + variance correction (extra comm round)."""
     return run_round(
         FedLinProgram(), loss_fn, params, client_batches, cfg,
-        round_idx=round_idx, client_weights=client_weights,
+        round_idx=round_idx, client_weights=client_weights, wire=wire,
     )
 
 
@@ -192,7 +194,7 @@ class FedLRTNaiveProgram:
 
     def broadcast(self, loss_fn, f: LowRankFactor, client_batches, ctx: RoundContext):
         losses = ctx.vmap_c(lambda b: loss_fn(f, b))(client_batches)
-        return {"f": f, "loss_before": ctx.aggregate(losses)}, None
+        return {"f": f, SERVER: {"loss_before": ctx.aggregate(losses)}}, None
 
     def client_step(self, loss_fn, shared, _pc, batch, ctx: RoundContext):
         return _naive_client_round(loss_fn, shared["f"], batch, ctx.cfg)
@@ -219,7 +221,7 @@ class FedLRTNaiveProgram:
             rank=r1.astype(jnp.float32),
         )
         metrics = {
-            "loss_before": shared["loss_before"],
+            "loss_before": shared[SERVER]["loss_before"],
             "rank": new_f.rank,
             # Alg. 6 communicates both augmented bases and coefficients per client
             "comm_bytes_per_client": jnp.float32(
@@ -247,9 +249,10 @@ def fedlrt_naive_round(
     *,
     round_idx: Array | int = 0,
     client_weights: Optional[Array] = None,
+    wire=None,
 ):
     """Algorithm 6 round — thin :func:`run_round` wrapper."""
     return run_round(
         FedLRTNaiveProgram(), loss_fn, f, client_batches, cfg,
-        round_idx=round_idx, client_weights=client_weights,
+        round_idx=round_idx, client_weights=client_weights, wire=wire,
     )

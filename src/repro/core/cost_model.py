@@ -15,6 +15,8 @@ function says bytes; ``b`` = local batch size, ``s*`` = local iterations.
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -172,6 +174,66 @@ def fedlrt_round_comm_bytes_effective(params, correction: str = "simplified"):
     for x in _dense_leaves(params):
         total = total + 4.0 * x.size
     return total * BYTES
+
+
+def wire_round_bytes(
+    params, method: str = "fedlrt", *, correction: str = "simplified"
+) -> dict:
+    """Analytic per-client bytes of the round's *wire-layer data plane*.
+
+    This prices exactly what :func:`repro.core.round.run_round` transmits
+    under the identity codec (f32 accounting, like the rest of this
+    module), per direction:
+
+    - ``down``: the shared broadcast (received once by every client) plus
+      that client's per-client slice — for FeDLRT the augmented factors
+      ``Ū, S̃, V̄`` (+ the rank counters) and, under correction, the
+      ``2r̂ × 2r̂`` correction block per factor; for the dense baselines the
+      global weights (+ FedLin's correction slice).
+    - ``up``: the client upload — FeDLRT's coefficient blocks (+ dense
+      leaves and the drift diagnostic scalar), a dense baseline's full
+      weights.
+
+    The wire layer's *measured* ``wire_bytes_{down,up}_per_client`` metrics
+    must match these numbers exactly for the identity codec — pinned by
+    ``tests/test_wire.py``.  Note the difference from
+    :func:`fedlrt_round_comm_bytes`: that counter follows the paper's
+    multi-message protocol (basis-gradient upload, augmented-basis
+    re-broadcast, …), while this one prices the phase-boundary payloads the
+    simulation actually ships.
+    """
+    fbytes = [
+        (
+            math.prod(f.U.shape[:-2]),  # stacked-layer slices
+            f.n_in,
+            f.n_out,
+            f.r_max,
+            int(jnp.asarray(f.rank).size),
+        )
+        for f in _factor_leaves(params)
+    ]
+    dense = sum(x.size for x in _dense_leaves(params))
+    if method.startswith("fedlrt_naive") or method == "naive":
+        (stack, n_in, n_out, r, rank_sz), = fbytes  # single-factor setting
+        down = (n_in + n_out) * r + r * r + rank_sz
+        up = (n_in + n_out) * 2 * r + 4 * r * r
+        return {"down": down * BYTES, "up": up * BYTES}
+    if method.startswith("fedlrt"):
+        aug = sum(
+            stack * ((n_in + n_out) * 2 * r + 4 * r * r) + rank_sz
+            for stack, n_in, n_out, r, rank_sz in fbytes
+        )
+        coeff = sum(stack * 4 * r * r for stack, _, _, r, _ in fbytes)
+        down = aug + dense
+        if correction in ("simplified", "full"):
+            down += coeff + dense  # per-client correction slice
+        up = coeff + dense + 1  # + the drift diagnostic scalar
+        return {"down": down * BYTES, "up": up * BYTES}
+    if method in ("fedavg", "fedlin"):
+        size = sum(x.size for x in jax.tree.leaves(params))
+        down = size * (2 if method == "fedlin" else 1)
+        return {"down": down * BYTES, "up": size * BYTES}
+    raise ValueError(f"unknown method {method!r}")
 
 
 def dense_round_comm_bytes(params, method: str = "fedlin") -> int:

@@ -58,6 +58,7 @@ from repro.core.factorization import (
     mask_coeff,
 )
 from repro.core.round import (
+    SERVER,
     FedConfig,
     LossFn,
     RoundContext,
@@ -259,15 +260,14 @@ class FedLRTProgram:
                 simpl, params, g_global, per_client_g, is_leaf=is_factor
             )
         else:  # "none"
-            corr_c = jax.tree.map(
-                lambda t: jnp.zeros((cfg.num_clients,) + t.shape, t.dtype), trainable0
-            )
+            corr_c = None  # uncorrected: nothing to send down per client
 
+        # downlink: the augmented factors (Ū, V̄, S̃ — what the paper
+        # broadcasts after augmentation); everything else is server-local
+        # and never crosses the wire.
         shared = {
             "aug_params": aug_params,
-            "trainable0": trainable0,
-            "g_global": g_global,
-            "loss_before": loss_before,
+            SERVER: {"g_global": g_global, "loss_before": loss_before},
         }
         return shared, corr_c
 
@@ -281,7 +281,10 @@ class FedLRTProgram:
     def client_step(self, loss_fn, shared, corr, batches, ctx: RoundContext):
         # -- 5: client coefficient optimization (s* local steps) ------------
         cfg = ctx.cfg
-        aug_params, trainable0 = shared["aug_params"], shared["trainable0"]
+        # the client derives its trainable view from the *received* factors
+        # (S̃ is a projection of the broadcast, not a separate transmission)
+        aug_params = shared["aug_params"]
+        trainable0 = trainable_of(aug_params)
         drift_fn = (
             (lambda tr: _coeff_drift(aug_params, tr, trainable0))
             if cfg.track_drift
@@ -326,10 +329,10 @@ class FedLRTProgram:
             new_params = _map_params(_constrain_factor, new_params, ctx.spec_tree)
 
         metrics = {
-            "loss_before": shared["loss_before"],
+            "loss_before": shared[SERVER]["loss_before"],
             "rank": {k: v["rank"] for k, v in infos.items()},
             "trunc_err": {k: v["trunc_err"] for k, v in infos.items()},
-            "grad_norm_S": _coeff_grad_norm(params, shared["g_global"]),
+            "grad_norm_S": _coeff_grad_norm(params, shared[SERVER]["g_global"]),
             # static r_max bound (python int, jit-constant) …
             "comm_bytes_per_client": jnp.float32(
                 cost_model.fedlrt_round_comm_bytes(params, cfg.correction)
@@ -363,6 +366,7 @@ def fedlrt_round(
     spec_tree=None,
     client_axes=None,
     client_weights: Optional[Array] = None,
+    wire=None,
 ):
     """One full FeDLRT aggregation round.  Returns ``(new_params, metrics)``.
 
@@ -382,6 +386,11 @@ def fedlrt_round(
     weights ∝ |X_c| — the paper's §2 weighted-average extension.  Applied
     to every ``aggregate`` (basis gradients, correction gradients,
     coefficients); normalized internally.
+
+    ``wire`` (optional :class:`repro.fed.wire.Wire`): on-the-wire codec for
+    the round's data plane — the augmented-factor broadcast, the per-client
+    correction slices and the coefficient uploads pass through it, and the
+    metrics gain measured ``wire_bytes_{down,up}_per_client``.
     """
     return run_round(
         FedLRTProgram(),
@@ -393,6 +402,7 @@ def fedlrt_round(
         client_weights=client_weights,
         spec_tree=spec_tree,
         client_axes=client_axes,
+        wire=wire,
     )
 
 

@@ -17,6 +17,13 @@ carries a leading client axis ``C`` (the *active cohort*, which under
 partial participation is smaller than the population — see
 :mod:`repro.fed.participation`).
 
+The phase boundaries are also the round's *data plane*: what ``broadcast``
+hands the clients crosses the wire down, what ``client_step`` returns
+crosses up.  :func:`run_round` optionally threads those payloads through a
+:class:`repro.fed.wire.Wire` (owned by the engine) — encode/decode plus
+measured byte accounting — while server-local state stays out of the
+transmission via the ``shared[SERVER]`` convention (see :data:`SERVER`).
+
 Shared building blocks that used to be duplicated per algorithm live here:
 :func:`local_sgd_scan` (the s*-step client loop as one ``lax.scan``) and
 :func:`variance_correction` (the FedLin/FeDLRT control-variate term).
@@ -65,7 +72,26 @@ class FedConfig:
 
     def __post_init__(self):
         if self.correction not in ("none", "simplified", "full"):
-            raise ValueError(f"bad correction {self.correction!r}")
+            raise ValueError(
+                f"correction must be 'none', 'simplified' or 'full', "
+                f"got {self.correction!r}"
+            )
+        if self.num_clients <= 0:
+            raise ValueError(
+                f"num_clients must be a positive cohort size, got {self.num_clients}"
+            )
+        if self.s_star <= 0:
+            raise ValueError(
+                f"s_star (local iterations per round) must be positive, "
+                f"got {self.s_star}"
+            )
+        if self.lr <= 0:
+            raise ValueError(f"lr must be positive, got {self.lr}")
+        if not 0.0 <= self.tau < 1.0:
+            raise ValueError(
+                f"tau is a *relative* singular-value threshold and must lie "
+                f"in [0, 1), got {self.tau}"
+            )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,6 +114,25 @@ class RoundContext:
     client_axes: Any = None
 
 
+#: key under which ``broadcast`` stashes server-local state.  Everything
+#: else in the shared dict is *downlink payload* — it crosses the wire to
+#: every client (and is what a :class:`repro.fed.wire.Wire` encodes).
+#: ``client_step`` never sees the server entry; ``aggregate``/``finalize``
+#: get the full original shared dict (the server keeps its own copies).
+SERVER = "__server__"
+
+
+def split_server(shared):
+    """Split a broadcast ``shared`` dict into ``(downlink, server_state)``.
+
+    Programs that predate the wire layer (plain dicts without a
+    :data:`SERVER` entry) broadcast everything.
+    """
+    if isinstance(shared, dict) and SERVER in shared:
+        return {k: v for k, v in shared.items() if k != SERVER}, shared[SERVER]
+    return shared, None
+
+
 @runtime_checkable
 class RoundProgram(Protocol):
     """One federated algorithm, decomposed into the four round phases."""
@@ -95,15 +140,29 @@ class RoundProgram(Protocol):
     def broadcast(self, loss_fn: LossFn, params, client_batches, ctx: RoundContext):
         """Server-side prep.  Returns ``(shared, per_client)`` where
         ``shared`` is broadcast state closed over by every client and
-        ``per_client`` carries a leading client axis (or is None)."""
+        ``per_client`` carries a leading client axis (or is None).
+
+        Wire contract: ``shared`` entries are *transmitted* to every
+        client; values only the server needs (metrics, cached gradients)
+        belong under ``shared[SERVER]`` so they are neither measured nor
+        degraded by a lossy wire codec.  ``per_client`` is sliced along its
+        leading axis — client ``c`` receives (and is billed for) row ``c``.
+        """
         ...
 
     def client_step(self, loss_fn: LossFn, shared, per_client, batches, ctx: RoundContext):
-        """One client's local work (the runner vmaps this over the cohort)."""
+        """One client's local work (the runner vmaps this over the cohort).
+
+        ``shared``/``per_client`` here are the *received* payloads: the
+        :data:`SERVER` entry is stripped, and under a lossy wire codec the
+        tensors carry that codec's on-wire representation error.
+        """
         ...
 
     def aggregate(self, shared, client_out, ctx: RoundContext):
-        """Server reduction over the stacked client outputs."""
+        """Server reduction over the stacked client outputs.  ``shared`` is
+        the original broadcast dict (server-side copies); ``client_out`` is
+        what arrived back over the wire."""
         ...
 
     def finalize(self, loss_fn: LossFn, params, shared, agg, client_batches, ctx: RoundContext):
@@ -165,8 +224,19 @@ def run_round(
     client_weights: Optional[Array] = None,
     spec_tree=None,
     client_axes=None,
+    wire=None,
 ):
-    """Execute one round of ``program``.  Returns ``(new_params, metrics)``."""
+    """Execute one round of ``program``.  Returns ``(new_params, metrics)``.
+
+    ``wire`` (optional :class:`repro.fed.wire.Wire`) decorates the phase
+    boundaries — the data plane of the round: the broadcast downlink and
+    per-client slices are encoded/decoded before ``client_step`` sees them,
+    the client outputs before ``aggregate`` sees them.  Measured bytes land
+    in the metrics as ``wire_bytes_down_per_client`` /
+    ``wire_bytes_up_per_client`` (down counts the shared broadcast once per
+    client plus that client's slice).  Programs need no changes: with the
+    identity codec the round is bit-identical to ``wire=None``.
+    """
     ctx = make_context(
         cfg,
         round_idx=round_idx,
@@ -175,12 +245,53 @@ def run_round(
         client_axes=client_axes,
     )
     shared, per_client = program.broadcast(loss_fn, params, client_batches, ctx)
+    # clients only ever see the downlink part; the server keeps `shared`
+    client_shared, _ = split_server(shared)
+    bytes_shared = bytes_pc = bytes_up = 0
+    if wire is not None:
+        client_shared, bytes_shared = wire.roundtrip(client_shared, name="broadcast")
+        per_client, bytes_pc = wire.roundtrip(
+            per_client, name="per_client", batched=True
+        )
     client_out = ctx.vmap_c(
-        lambda pc, b: program.client_step(loss_fn, shared, pc, b, ctx),
+        lambda pc, b: program.client_step(loss_fn, client_shared, pc, b, ctx),
         in_axes=(0, 0),
     )(per_client, client_batches)
+    if wire is not None:
+        client_out, bytes_up = wire.roundtrip(
+            client_out, name="client_out", batched=True
+        )
     agg = program.aggregate(shared, client_out, ctx)
-    return program.finalize(loss_fn, params, shared, agg, client_batches, ctx)
+    new_params, metrics = program.finalize(
+        loss_fn, params, shared, agg, client_batches, ctx
+    )
+    if wire is not None:
+        metrics = dict(metrics)
+        metrics["wire_bytes_down_per_client"] = _per_client_bytes(
+            bytes_shared, bytes_pc, cfg.num_clients
+        )
+        metrics["wire_bytes_up_per_client"] = _per_client_bytes(
+            0, bytes_up, cfg.num_clients
+        )
+    return new_params, metrics
+
+
+def _per_client_bytes(shared_bytes, batched_bytes, num_clients: int):
+    """``shared + batched/C`` per-client bytes, exactly when possible.
+
+    Static codec counts are python ints whose batched totals divide evenly
+    over the ``C`` equal-size client slices — integer arithmetic keeps the
+    measured == analytic contract exact up to int32 range (~2 GiB/client/
+    direction) instead of f32's 2^24 bytes.  Traced counts (topk_rank's
+    rank-dependent meter) take the f32 path.
+    """
+    if (
+        isinstance(shared_bytes, int)
+        and isinstance(batched_bytes, int)
+        and batched_bytes % num_clients == 0
+    ):
+        return shared_bytes + batched_bytes // num_clients
+    return jnp.float32(shared_bytes) + jnp.float32(batched_bytes) / num_clients
 
 
 # ---------------------------------------------------------------------------
@@ -238,8 +349,10 @@ def local_sgd_scan(
     The single implementation behind every round program's client loop:
     FeDLRT passes ``transform_grads``/``project`` to keep coefficient
     updates in the 2r active directions, the dense baselines use it bare.
-    ``drift_fn`` (optional) accumulates ``max_s drift_fn(params_s)`` — the
-    Theorem-1 diagnostic.  Returns ``(params_s*, max_drift)``.
+    ``corr=None`` means uncorrected (no control variate is added — and, under
+    the wire layer, none is transmitted).  ``drift_fn`` (optional)
+    accumulates ``max_s drift_fn(params_s)`` — the Theorem-1 diagnostic.
+    Returns ``(params_s*, max_drift)``.
     """
     opt = make_optimizer(cfg.optimizer, cfg.lr, momentum=cfg.momentum)
     state0 = opt.init(params0)
@@ -248,7 +361,8 @@ def local_sgd_scan(
         p, ost, drift = carry
         b = select_step_batch(batches, s, cfg)
         g = jax.grad(loss_fn)(p, b)
-        g = jax.tree.map(jnp.add, g, corr)
+        if corr is not None:
+            g = jax.tree.map(jnp.add, g, corr)
         if transform_grads is not None:
             g = transform_grads(g)
         upd, ost = opt.update(g, ost, s)

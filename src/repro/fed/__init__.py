@@ -1,2 +1,14 @@
 from repro.fed.engine import FederatedEngine, RoundResult  # noqa: F401
 from repro.fed.participation import Participation  # noqa: F401
+from repro.fed.wire import (  # noqa: F401
+    CODEC_SPECS,
+    DowncastCodec,
+    IdentityCodec,
+    Int8AffineCodec,
+    Payload,
+    TopKRankCodec,
+    Wire,
+    WireCodec,
+    WireMsg,
+    make_codec,
+)

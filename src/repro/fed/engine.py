@@ -19,6 +19,13 @@ repeats of active clients, so the whole run shares a single executable
 (``client_weights`` ∝ |X_c|) is threaded per cohort as a traced argument,
 so re-weighting never recompiles.
 
+The wire: the engine owns a :class:`repro.fed.wire.Wire` (``wire_codec``,
+default ``"identity"``) and threads it through every round's phase
+boundaries, so the server↔client payloads are explicit, optionally
+compressed on the wire, and *measured* — :meth:`FederatedEngine.
+comm_total_bytes` sums what the codec actually shipped, while the analytic
+cost-model estimate stays available as :meth:`comm_total_bytes_analytic`.
+
 Restartability: checkpoints carry ``round_idx`` and a sidecar snapshot of
 the batcher stream state; :meth:`FederatedEngine.restore` resumes a run
 that replays the remaining rounds bit-identically.
@@ -36,6 +43,7 @@ import numpy as np
 from repro.core import FedConfig, fedlrt_round
 from repro.core.baselines import fedavg_round, fedlin_round, fedlrt_naive_round
 from repro.fed.participation import Participation
+from repro.fed.wire import Wire
 
 ROUND_METHODS = {
     "fedlrt": fedlrt_round,
@@ -58,6 +66,11 @@ class RoundResult:
     # effective-rank on-wire bytes (shrinks as truncation adapts ranks);
     # 0.0 for methods that don't report it (dense baselines)
     comm_bytes_per_client_effective: float = 0.0
+    # *measured* wire-layer bytes (per client, per direction) — what the
+    # round's codec actually put on the wire; see repro.fed.wire
+    wire_bytes_down_per_client: float = 0.0
+    wire_bytes_up_per_client: float = 0.0
+    wire_codec: str = ""
 
 
 class FederatedEngine:
@@ -74,6 +87,7 @@ class FederatedEngine:
         checkpoint_every: int = 0,
         donate: bool = True,
         client_weights=None,
+        wire_codec="identity",
     ):
         if method not in ROUND_METHODS:
             raise ValueError(f"method must be one of {list(ROUND_METHODS)}")
@@ -96,6 +110,15 @@ class FederatedEngine:
         self._donate = donate
         self._step_cache: Dict[tuple, Callable] = {}
         self._batcher = None  # set by train(); snapshotted into checkpoints
+        # the wire: every round's data plane passes through it, so comm
+        # accounting is *measured* (identity codec = verbatim bytes), not
+        # estimated.  wire_codec=None opts out (raw pytrees, no metering).
+        if wire_codec is None:
+            self.wire: Optional[Wire] = None
+        elif isinstance(wire_codec, Wire):
+            self.wire = wire_codec
+        else:
+            self.wire = Wire(wire_codec)
 
     def _step_for(self, cohort_size: int, *, weighted: bool) -> Callable:
         """Jitted round step for an active cohort of ``cohort_size`` clients.
@@ -108,15 +131,16 @@ class FederatedEngine:
         step = self._step_cache.get(key)
         if step is None:
             cfg_k = dataclasses.replace(self.cfg, num_clients=cohort_size)
-            round_fn, loss_fn = self._round_fn, self._loss_fn
+            round_fn, loss_fn, wire = self._round_fn, self._loss_fn, self.wire
             if weighted:
                 def raw(p, b, r, w):
                     return round_fn(
-                        loss_fn, p, b, cfg_k, round_idx=r, client_weights=w
+                        loss_fn, p, b, cfg_k, round_idx=r, client_weights=w,
+                        wire=wire,
                     )
             else:
                 def raw(p, b, r):
-                    return round_fn(loss_fn, p, b, cfg_k, round_idx=r)
+                    return round_fn(loss_fn, p, b, cfg_k, round_idx=r, wire=wire)
             step = jax.jit(raw, donate_argnums=(0,) if self._donate else ())
             self._step_cache[key] = step
         return step
@@ -187,6 +211,13 @@ class FederatedEngine:
             comm_bytes_per_client_effective=float(
                 metrics.get("comm_bytes_per_client_effective", 0.0)
             ),
+            wire_bytes_down_per_client=float(
+                metrics.get("wire_bytes_down_per_client", 0.0)
+            ),
+            wire_bytes_up_per_client=float(
+                metrics.get("wire_bytes_up_per_client", 0.0)
+            ),
+            wire_codec=self.wire.name if self.wire is not None else "",
         )
         self.history.append(res)
         self.round_idx += 1
@@ -271,11 +302,19 @@ class FederatedEngine:
                     extra = f" mean_rank={mean_rank:.1f}"
                 if res.cohort_size != num_clients:
                     extra += f" cohort={res.cohort_size}/{num_clients}"
+                wire_mb = (
+                    res.wire_bytes_down_per_client + res.wire_bytes_up_per_client
+                ) / 1e6
+                comm = (
+                    f" wire {wire_mb:.2f} MB/client [{res.wire_codec}]"
+                    if res.wire_codec
+                    else f" comm {res.comm_bytes_per_client/1e6:.2f} MB/client"
+                )
                 print(
                     f"[{self.method}] round {res.round_idx:4d} "
                     f"loss {res.loss_before:.4f}"
                     + (f" → {res.loss_after:.4f}" if res.loss_after is not None else "")
-                    + f" comm {res.comm_bytes_per_client/1e6:.2f} MB/client"
+                    + comm
                     + extra
                 )
         return self.history
@@ -285,12 +324,39 @@ class FederatedEngine:
         return float(self.eval_fn(self.params, batch))
 
     def comm_total_bytes(self) -> float:
-        """Total server-side on-wire bytes so far.
+        """Total server-side on-wire bytes so far — **measured** uniformly.
 
-        Scales with the *active cohort* of every round, not the client
-        population — under uniform-k sampling this is k/C of the full-
-        participation figure.
+        Sums the wire layer's measured per-direction bytes (down + up, per
+        client) over every recorded round, scaled by that round's *active*
+        cohort.  Every method reports the same measurement (the old
+        behaviour silently fell back to analytic static-``r_max`` numbers
+        for methods without effective-rank counters); the analytic figure
+        remains available as :meth:`comm_total_bytes_analytic`.
+
+        Best-effort caveat: rounds that carry no measurement (run with
+        ``wire_codec=None``, or restored from a pre-wire checkpoint)
+        contribute the analytic estimate instead.  Measured and analytic
+        price different protocols (phase-boundary payloads vs the paper's
+        multi-message exchange), so a mixed history is an approximation —
+        for strictly comparable figures use :meth:`comm_total_bytes_analytic`,
+        which is uniform across all rounds.
         """
+        total = 0.0
+        for r in self.history:
+            # getattr: histories restored from pre-wire checkpoints lack
+            # the measured fields and fall back to the analytic figure
+            per_client = getattr(r, "wire_bytes_down_per_client", 0.0) + getattr(
+                r, "wire_bytes_up_per_client", 0.0
+            )
+            if per_client == 0.0 and not getattr(r, "wire_codec", ""):
+                per_client = r.comm_bytes_per_client  # unmetered round
+            total += per_client * r.cohort_size
+        return float(total)
+
+    def comm_total_bytes_analytic(self) -> float:
+        """Total bytes under the analytic cost model (static ``r_max``
+        protocol volumes, :mod:`repro.core.cost_model`) — the paper-style
+        estimate the measured figure is cross-checked against."""
         return float(
             sum(r.comm_bytes_per_client * r.cohort_size for r in self.history)
         )

@@ -81,6 +81,12 @@ def main(argv=None):
         "(jnp reference elsewhere), interpret = force the Pallas "
         "interpreter (CPU validation, slow), off = plain jnp chain",
     )
+    ap.add_argument(
+        "--wire-codec", default="identity",
+        help="on-the-wire codec for round payloads: identity | "
+        "downcast[:dtype] | int8_affine | topk_rank (see repro.fed.wire); "
+        "comm totals are measured through it",
+    )
     ap.add_argument("--rounds", type=int, default=40)
     ap.add_argument("--local-steps", type=int, default=4)
     ap.add_argument("--batch", type=int, default=4)
@@ -126,13 +132,15 @@ def main(argv=None):
         client_weights=partition_sizes(parts) if args.weighted else None,
         checkpoint_dir=args.checkpoint_dir,
         checkpoint_every=20 if args.checkpoint_dir else 0,
+        wire_codec=args.wire_codec,
     )
     hist = eng.train(batcher, args.rounds, log_every=args.log_every)
     mean_cohort = np.mean([r.cohort_size for r in hist])
     print(
         f"done: loss {hist[0].loss_before:.4f} → {hist[-1].loss_before:.4f}; "
-        f"total comm {eng.comm_total_bytes()/1e6:.1f} MB "
-        f"(mean cohort {mean_cohort:.1f}/{args.clients})"
+        f"total comm {eng.comm_total_bytes()/1e6:.1f} MB measured "
+        f"[{args.wire_codec}] vs {eng.comm_total_bytes_analytic()/1e6:.1f} MB "
+        f"analytic (mean cohort {mean_cohort:.1f}/{args.clients})"
     )
     return hist
 

@@ -131,17 +131,21 @@ def test_partial_cohort_runs_and_comm_scales_with_cohort():
     hist = eng.train(batcher, 4, log_every=0)
     assert all(r.cohort_size == 2 for r in hist)
     assert all(len(r.cohort) == 2 for r in hist)
-    # server comm counts only the active cohort, not the population, and
-    # agrees with the analytic cost-model counter
+    # server comm counts only the active cohort, not the population; the
+    # analytic figure agrees with the cost-model counter and the measured
+    # figure with the wire layer's per-round byte counts
     from repro.core import cost_model
 
     per_client = hist[0].comm_bytes_per_client
-    assert eng.comm_total_bytes() == pytest.approx(4 * 2 * per_client)
-    assert eng.comm_total_bytes() == pytest.approx(
+    assert eng.comm_total_bytes_analytic() == pytest.approx(4 * 2 * per_client)
+    assert eng.comm_total_bytes_analytic() == pytest.approx(
         4 * cost_model.round_total_comm_bytes(
             f, "fedlrt", correction=cfg.correction, cohort_size=2
         )
     )
+    wire_pc = hist[0].wire_bytes_down_per_client + hist[0].wire_bytes_up_per_client
+    assert wire_pc > 0
+    assert eng.comm_total_bytes() == pytest.approx(4 * 2 * wire_pc)
     assert np.isfinite([r.loss_before for r in hist]).all()
 
 

@@ -10,6 +10,13 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 from repro.core import FedConfig, fedlrt_round, init_factor, materialize
 from repro.core.dlrt import augment_basis, pick_rank, truncate
 from repro.core.factorization import augmented_mask, check_invariants, rank_mask
+from repro.fed.wire import (
+    DowncastCodec,
+    IdentityCodec,
+    Int8AffineCodec,
+    Payload,
+    payload_nbytes,
+)
 
 SETTINGS = dict(max_examples=12, deadline=None)
 
@@ -126,6 +133,82 @@ def test_identical_clients_match_single_client(seed, c):
     np.testing.assert_allclose(
         materialize(f1), materialize(fC), rtol=1e-3, atol=1e-4
     )
+
+
+# ---------------------------------------------------------------------------
+# wire codecs (repro.fed.wire): round-trip / error-bound invariants
+# ---------------------------------------------------------------------------
+
+
+def _wire_tree(n_in, n_out, r_max, init_rank, seed):
+    """A payload like the rounds ship: a factor leaf + a dense leaf."""
+    f = init_factor(
+        jax.random.PRNGKey(seed), n_in, n_out, r_max=r_max, init_rank=init_rank
+    )
+    dense = 2.0 * jax.random.normal(jax.random.PRNGKey(seed + 1), (n_out, 3))
+    return {"w": f, "dense": dense}
+
+
+@settings(**SETTINGS)
+@given(
+    n_in=st.integers(8, 64),
+    n_out=st.integers(8, 64),
+    r_max=st.integers(2, 12),
+    init_rank=st.integers(1, 12),
+    seed=st.integers(0, 10_000),
+)
+def test_wire_identity_roundtrip_exact(n_in, n_out, r_max, init_rank, seed):
+    """identity: bit-exact round trip and verbatim byte accounting on
+    arbitrary factor shapes."""
+    tree = _wire_tree(n_in, n_out, r_max, init_rank, seed)
+    codec = IdentityCodec()
+    msg = codec.encode(Payload(tensors=tree))
+    dec = codec.decode(msg).tensors
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(dec)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert codec.nbytes(msg) == payload_nbytes(tree)
+
+
+@settings(**SETTINGS)
+@given(
+    n_in=st.integers(8, 64),
+    n_out=st.integers(8, 64),
+    r_max=st.integers(2, 12),
+    init_rank=st.integers(1, 12),
+    seed=st.integers(0, 10_000),
+)
+def test_wire_downcast_roundtrip_within_dtype_eps(
+    n_in, n_out, r_max, init_rank, seed
+):
+    """downcast: every leaf returns at its rest dtype, within the wire
+    dtype's relative eps (small leaves travel verbatim — error 0)."""
+    tree = _wire_tree(n_in, n_out, r_max, init_rank, seed)
+    codec = DowncastCodec()  # bf16: 8 mantissa bits → rel err ≤ 2^-8
+    dec = codec.decode(codec.encode(Payload(tensors=tree))).tensors
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(dec)):
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.dtype == b.dtype
+        np.testing.assert_allclose(b, a, rtol=2.0 ** -8, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    n_in=st.integers(8, 64),
+    n_out=st.integers(8, 64),
+    r_max=st.integers(2, 12),
+    init_rank=st.integers(1, 12),
+    seed=st.integers(0, 10_000),
+)
+def test_wire_int8_error_bounded_by_scale(n_in, n_out, r_max, init_rank, seed):
+    """int8_affine: per-leaf absolute error ≤ scale/2 with
+    scale = (max − min)/255 (the affine quantization step)."""
+    tree = _wire_tree(n_in, n_out, r_max, init_rank, seed)
+    codec = Int8AffineCodec()
+    dec = codec.decode(codec.encode(Payload(tensors=tree))).tensors
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(dec)):
+        a, b = np.asarray(a), np.asarray(b)
+        scale = (a.max() - a.min()) / 255.0 if a.size else 0.0
+        assert np.abs(b - a).max() <= scale / 2 + 1e-6
 
 
 @settings(**SETTINGS)
