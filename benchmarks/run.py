@@ -8,9 +8,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
   fig5_*       CV proxy: accuracy vs client count, non-iid
   wire_*       wire codecs: measured bytes saved vs accuracy vs wall-clock
   kernel_*     low-rank chain vs dense matmul + Pallas interpret check
+  sim_*        system simulator: time-to-target-loss, engines × stragglers
   roofline_*   dry-run roofline terms (requires results/dryrun/*.json)
 
-Run:  PYTHONPATH=src python -m benchmarks.run [--quick]
+Run:  PYTHONPATH=src python -m benchmarks.run [--quick|--smoke]
 """
 from __future__ import annotations
 
@@ -22,12 +23,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="fewer rounds")
     ap.add_argument(
+        "--smoke", action="store_true",
+        help="minimal rounds — CI exercise of the benchmark drivers "
+        "(implies --quick)",
+    )
+    ap.add_argument(
         "--only", type=str, default=None,
-        help="comma-separated subset: lsq,costs,cv,wire,kernels,roofline",
+        help="comma-separated subset: lsq,costs,cv,wire,kernels,sim,roofline",
     )
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
-    q = args.quick
+    q = args.quick or args.smoke
 
     def want(name):
         return only is None or name in only
@@ -51,7 +57,11 @@ def main() -> None:
     if want("wire"):
         from benchmarks.bench_wire import wire_codecs
 
-        wire_codecs(rounds=10 if q else 25)
+        wire_codecs(rounds=3 if args.smoke else (10 if q else 25))
+    if want("sim"):
+        from benchmarks.bench_sim import sim_pareto
+
+        sim_pareto(rounds=10 if q else 25, smoke=args.smoke)
     if want("kernels"):
         from benchmarks.bench_kernels import chain_vs_dense
 

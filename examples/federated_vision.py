@@ -83,7 +83,8 @@ def accuracy(p, x, y, kernels="off"):
 
 
 def run(method, C, rounds, x, y, xt, yt, seed=0, participation=None,
-        weighted=False, kernels="off", wire_codec="identity"):
+        weighted=False, kernels="off", wire_codec="identity",
+        engine="sync", sim_profile=None):
     parts = partition_dirichlet(y, C, alpha=0.3, seed=seed)
     s_star = max(240 // C, 1)
     batcher = FederatedBatcher(
@@ -95,18 +96,32 @@ def run(method, C, rounds, x, y, xt, yt, seed=0, participation=None,
     )
     lowrank = method.startswith("fedlrt")
     params = init_params(jax.random.PRNGKey(seed), lowrank=lowrank)
-    eng = FederatedEngine(
-        make_loss_fn(kernels), params, cfg,
-        method="fedlrt" if lowrank else method,
-        participation=participation,
-        client_weights=partition_sizes(parts) if weighted else None,
-        wire_codec=wire_codec,
-    )
+    client_weights = partition_sizes(parts) if weighted else None
+    if engine != "sync" or sim_profile is not None:
+        from repro.fed.sim import make_sim_engine
+
+        kw = dict(
+            sim_profile=sim_profile, seed=seed, wire_codec=wire_codec,
+            method="fedlrt" if lowrank else method,
+            client_weights=client_weights,
+            # engines that can't honor the participation policy refuse
+            # loudly rather than silently training full-participation
+            participation=participation,
+        )
+        eng = make_sim_engine(engine, make_loss_fn(kernels), params, cfg, **kw)
+    else:
+        eng = FederatedEngine(
+            make_loss_fn(kernels), params, cfg,
+            method="fedlrt" if lowrank else method,
+            participation=participation,
+            client_weights=client_weights,
+            wire_codec=wire_codec,
+        )
     hist = eng.train(batcher, rounds, log_every=0)
     acc = accuracy(eng.params, xt, yt, kernels)
     rank = int(eng.params["w1"].rank) if lowrank else "-"
     mean_cohort = float(np.mean([r.cohort_size for r in hist]))
-    return acc, eng.comm_total_bytes(), rank, mean_cohort
+    return acc, eng.comm_total_bytes(), rank, mean_cohort, hist[-1].t_virtual
 
 
 def main():
@@ -127,6 +142,13 @@ def main():
                     help="on-the-wire payload codec: identity | "
                     "downcast[:dtype] | int8_affine | topk_rank; the comm "
                     "column reports bytes *measured* through it")
+    ap.add_argument("--engine", default="sync",
+                    choices=["sync", "async", "hier"],
+                    help="aggregation engine (repro.fed.sim): async = "
+                    "FedBuff-style buffered, hier = two-tier edge→cloud")
+    ap.add_argument("--sim-profile", type=str, default=None,
+                    help="fleet spec for virtual-clock pricing: uniform | "
+                    "straggler[:FRAC[,SLOWDOWN]] | lognormal[:SIGMA]")
     args = ap.parse_args()
 
     x, y = make_classification_data(
@@ -136,19 +158,25 @@ def main():
     x, y = x[:-2048], y[:-2048]
 
     participation = Participation.from_spec(args.participation)
-    print(f"participation={args.participation} wire_codec={args.wire_codec}")
+    print(
+        f"participation={args.participation} wire_codec={args.wire_codec} "
+        f"engine={args.engine}"
+        + (f" sim_profile={args.sim_profile}" if args.sim_profile else "")
+    )
     print(f"{'method':>18} | " + " | ".join(f"C={c}" for c in args.clients))
     for method in ("fedavg", "fedlin", "fedlrt:none", "fedlrt:simplified"):
         cells = []
         for C in args.clients:
-            acc, comm, rank, mean_cohort = run(
+            acc, comm, rank, mean_cohort, t_virtual = run(
                 method, C, args.rounds, x, y, xt, yt,
                 participation=participation, weighted=args.weighted,
                 kernels=args.kernels, wire_codec=args.wire_codec,
+                engine=args.engine, sim_profile=args.sim_profile,
             )
             cells.append(
                 f"acc={acc:.3f} comm={comm/1e6:5.1f}MB "
                 f"rank={rank} cohort={mean_cohort:.1f}"
+                + (f" t={t_virtual:.1f}s" if t_virtual else "")
             )
         print(f"{method:>18} | " + " | ".join(cells))
 

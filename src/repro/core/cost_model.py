@@ -271,6 +271,21 @@ def client_flops_per_local_step(params, batch_tokens: int) -> float:
     return total
 
 
+def client_step_flops(params, batch_tokens: int) -> float:
+    """Fwd+bwd matmul FLOPs of one local step over the *whole* pytree.
+
+    Extends :func:`client_flops_per_local_step` (factor leaves only) with
+    the dense 2-D leaves, priced as full matmuls (fwd ``2·b·n·m``, bwd
+    ≈ 2× fwd) — so dense baselines (FedAvg/FedLin) get comparable compute
+    pricing in the system simulator.  Vectors and scalars are free.
+    """
+    total = client_flops_per_local_step(params, batch_tokens)
+    for x in _dense_leaves(params):
+        if getattr(x, "ndim", 0) >= 2:
+            total += 6.0 * batch_tokens * math.prod(x.shape[-2:])
+    return total
+
+
 def factor_storage_bytes(params) -> int:
     return sum(
         (f.U.size + f.S.size + f.V.size) * f.U.dtype.itemsize

@@ -213,6 +213,46 @@ def make_context(
     )
 
 
+def run_client_phases(
+    program: RoundProgram,
+    loss_fn: LossFn,
+    params,
+    client_batches,
+    ctx: RoundContext,
+    *,
+    wire=None,
+):
+    """The data-plane half of a round: ``broadcast`` then the vmapped
+    ``client_step``, with every boundary payload threaded through ``wire``.
+
+    Returns ``(shared, client_out, (bytes_shared, bytes_per_client,
+    bytes_up))`` — the server-side broadcast dict (with its ``SERVER``
+    entry intact), the stacked client outputs *as received over the wire*,
+    and the measured byte totals per payload.  :func:`run_round` is this
+    followed by ``aggregate``/``finalize``; the async simulation engine
+    (:mod:`repro.fed.sim`) calls it directly to run departure-anchored
+    client work for one staleness group at a time.
+    """
+    shared, per_client = program.broadcast(loss_fn, params, client_batches, ctx)
+    # clients only ever see the downlink part; the server keeps `shared`
+    client_shared, _ = split_server(shared)
+    bytes_shared = bytes_pc = bytes_up = 0
+    if wire is not None:
+        client_shared, bytes_shared = wire.roundtrip(client_shared, name="broadcast")
+        per_client, bytes_pc = wire.roundtrip(
+            per_client, name="per_client", batched=True
+        )
+    client_out = ctx.vmap_c(
+        lambda pc, b: program.client_step(loss_fn, client_shared, pc, b, ctx),
+        in_axes=(0, 0),
+    )(per_client, client_batches)
+    if wire is not None:
+        client_out, bytes_up = wire.roundtrip(
+            client_out, name="client_out", batched=True
+        )
+    return shared, client_out, (bytes_shared, bytes_pc, bytes_up)
+
+
 def run_round(
     program: RoundProgram,
     loss_fn: LossFn,
@@ -244,23 +284,9 @@ def run_round(
         spec_tree=spec_tree,
         client_axes=client_axes,
     )
-    shared, per_client = program.broadcast(loss_fn, params, client_batches, ctx)
-    # clients only ever see the downlink part; the server keeps `shared`
-    client_shared, _ = split_server(shared)
-    bytes_shared = bytes_pc = bytes_up = 0
-    if wire is not None:
-        client_shared, bytes_shared = wire.roundtrip(client_shared, name="broadcast")
-        per_client, bytes_pc = wire.roundtrip(
-            per_client, name="per_client", batched=True
-        )
-    client_out = ctx.vmap_c(
-        lambda pc, b: program.client_step(loss_fn, client_shared, pc, b, ctx),
-        in_axes=(0, 0),
-    )(per_client, client_batches)
-    if wire is not None:
-        client_out, bytes_up = wire.roundtrip(
-            client_out, name="client_out", batched=True
-        )
+    shared, client_out, (bytes_shared, bytes_pc, bytes_up) = run_client_phases(
+        program, loss_fn, params, client_batches, ctx, wire=wire
+    )
     agg = program.aggregate(shared, client_out, ctx)
     new_params, metrics = program.finalize(
         loss_fn, params, shared, agg, client_batches, ctx

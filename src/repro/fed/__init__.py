@@ -1,4 +1,10 @@
-from repro.fed.engine import FederatedEngine, RoundResult  # noqa: F401
+from repro.fed.engine import (  # noqa: F401
+    ROUND_METHODS,
+    FederatedEngine,
+    RoundResult,
+    register_round_method,
+    round_program_for,
+)
 from repro.fed.participation import Participation  # noqa: F401
 from repro.fed.wire import (  # noqa: F401
     CODEC_SPECS,

@@ -34,23 +34,73 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import FedConfig, fedlrt_round
-from repro.core.baselines import fedavg_round, fedlin_round, fedlrt_naive_round
+from repro.core.baselines import (
+    FedAvgProgram,
+    FedLinProgram,
+    FedLRTNaiveProgram,
+    fedavg_round,
+    fedlin_round,
+    fedlrt_naive_round,
+)
+from repro.core.fedlrt import FedLRTProgram
 from repro.fed.participation import Participation
 from repro.fed.wire import Wire
 
-ROUND_METHODS = {
-    "fedlrt": fedlrt_round,
-    "fedavg": fedavg_round,
-    "fedlin": fedlin_round,
-    "fedlrt_naive": fedlrt_naive_round,
-}
+#: round-method registry: name → round function.  Extend via
+#: :func:`register_round_method`, never by editing this module — the sim
+#: engines (and future scenario programs) plug in through the registry.
+ROUND_METHODS: Dict[str, Callable] = {}
+
+#: name → zero-arg factory of the method's :class:`RoundProgram` (for
+#: engines that need phase-level access, e.g. the async simulator's
+#: staleness-grouped execution).  ``None`` for methods registered without
+#: a program (legacy monolithic round functions).
+ROUND_PROGRAMS: Dict[str, Optional[Callable]] = {}
+
+
+def register_round_method(name: str, fn: Callable, *, program=None, overwrite=False):
+    """Register a federated round method under ``name``.
+
+    ``fn`` is the round entry point with the standard signature
+    ``(loss_fn, params, client_batches, cfg, *, round_idx, client_weights,
+    wire) → (new_params, metrics)``.  ``program`` (optional) is a zero-arg
+    factory returning the method's :class:`repro.core.round.RoundProgram`
+    — required by engines that decompose rounds into phases (the async
+    simulator).  Re-registration needs ``overwrite=True``.
+    """
+    if not overwrite and name in ROUND_METHODS:
+        raise ValueError(
+            f"round method {name!r} is already registered "
+            f"(pass overwrite=True to replace it)"
+        )
+    ROUND_METHODS[name] = fn
+    ROUND_PROGRAMS[name] = program
+
+
+def round_program_for(method: str):
+    """Instantiate the registered :class:`RoundProgram` for ``method``
+    (raises for methods registered without one)."""
+    factory = ROUND_PROGRAMS.get(method)
+    if factory is None:
+        raise ValueError(
+            f"round method {method!r} has no registered RoundProgram; "
+            f"register_round_method(..., program=...) to enable phase-level "
+            f"engines"
+        )
+    return factory()
+
+
+register_round_method("fedlrt", fedlrt_round, program=FedLRTProgram)
+register_round_method("fedavg", fedavg_round, program=FedAvgProgram)
+register_round_method("fedlin", fedlin_round, program=FedLinProgram)
+register_round_method("fedlrt_naive", fedlrt_naive_round, program=FedLRTNaiveProgram)
 
 
 @dataclasses.dataclass
@@ -71,6 +121,49 @@ class RoundResult:
     wire_bytes_down_per_client: float = 0.0
     wire_bytes_up_per_client: float = 0.0
     wire_codec: str = ""
+    # virtual-clock timing (repro.fed.sim): how long the round took in
+    # simulated seconds and the clock reading at its end; 0.0 when the run
+    # is not priced through a system simulator.
+    virtual_seconds: float = 0.0
+    t_virtual: float = 0.0
+    # mean staleness (server versions) of the aggregated contributions —
+    # always 0.0 for synchronous rounds
+    staleness_mean: float = 0.0
+
+
+#: version tag of the checkpoint state sidecar.  v1: ``history`` is a list
+#: of JSON-safe dicts (ints/floats/strs/lists/None only) instead of pickled
+#: :class:`RoundResult` objects — pickles of the dataclass break whenever a
+#: field is added/renamed (e.g. the sim timing fields), plain dicts don't.
+STATE_VERSION = 1
+
+
+def history_to_state(history: List[RoundResult]) -> List[dict]:
+    """``history`` as JSON-safe dicts (the v1 sidecar representation)."""
+    out = []
+    for r in history:
+        d = dataclasses.asdict(r)
+        d["ranks"] = {k: np.asarray(v).tolist() for k, v in r.ranks.items()}
+        d["cohort"] = None if r.cohort is None else np.asarray(r.cohort).tolist()
+        out.append(d)
+    return out
+
+
+def history_from_state(rounds: List[dict]) -> List[RoundResult]:
+    """Inverse of :func:`history_to_state`, tolerant of field drift: dict
+    keys the current dataclass lacks are dropped, missing fields take the
+    dataclass defaults — so a checkpoint written before a field was added
+    (or after one is removed) still restores."""
+    fields = {f.name for f in dataclasses.fields(RoundResult)}
+    out = []
+    for d in rounds:
+        d = {k: v for k, v in d.items() if k in fields}
+        if d.get("ranks") is not None:
+            d["ranks"] = {k: np.asarray(v) for k, v in d["ranks"].items()}
+        if d.get("cohort") is not None:
+            d["cohort"] = np.asarray(d["cohort"])
+        out.append(RoundResult(**d))
+    return out
 
 
 class FederatedEngine:
@@ -246,8 +339,13 @@ class FederatedEngine:
         # sidecar: data-stream state (so a restored run replays the
         # remaining rounds bit-identically — same per-client shuffle
         # cursors and RNG states) plus the round history (so cumulative
-        # accounting like comm_total_bytes() spans the whole run)
-        state = {"history": list(self.history)}
+        # accounting like comm_total_bytes() spans the whole run).  The
+        # history is stored as versioned JSON-safe dicts, never pickled
+        # dataclasses — see :data:`STATE_VERSION`.
+        state = {
+            "version": STATE_VERSION,
+            "history": history_to_state(self.history),
+        }
         if self._batcher is not None and hasattr(self._batcher, "state"):
             state["batcher"] = self._batcher.state()
         np.save(
@@ -277,7 +375,13 @@ class FederatedEngine:
         state_path = path + ".state.npy"
         if os.path.exists(state_path):
             state = np.load(state_path, allow_pickle=True).item()
-            self.history = list(state.get("history", []))
+            if state.get("version", 0) >= 1:
+                self.history = history_from_state(state.get("history", []))
+            else:
+                # legacy (pre-versioned) sidecar: the history rode along as
+                # pickled RoundResult objects — loadable as long as the
+                # pickle resolves, kept for old checkpoints on disk
+                self.history = list(state.get("history", []))
             if batcher is not None and "batcher" in state:
                 batcher.set_state(state["batcher"])
         return meta

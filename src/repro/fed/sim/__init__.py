@@ -1,0 +1,19 @@
+from repro.fed.sim.clock import Timeline, VirtualClock  # noqa: F401
+from repro.fed.sim.engines import (  # noqa: F401
+    AsyncFederatedEngine,
+    HierarchicalEngine,
+    SyncSimEngine,
+    make_sim_engine,
+)
+from repro.fed.sim.events import (  # noqa: F401
+    ClientAvailable,
+    ClientDropped,
+    ClientFinished,
+    EventQueue,
+    ServerAggregate,
+)
+from repro.fed.sim.profiles import (  # noqa: F401
+    Fleet,
+    SystemProfile,
+    client_round_flops,
+)

@@ -1,0 +1,964 @@
+"""Simulation engines: federated rounds priced on a virtual clock.
+
+Three engines share :class:`repro.fed.engine.FederatedEngine`'s interface
+(``train(batcher, rounds)``, ``params``, ``history``,
+``comm_total_bytes()``) but differ in *when the server aggregates*:
+
+- :class:`SyncSimEngine` — the synchronous engine with a clock attached:
+  each round's virtual duration is the **max** over the active cohort of
+  ``download + compute + upload`` (the straggler barrier), priced from the
+  cohort's :class:`repro.fed.sim.profiles.SystemProfile`s, the cost-model
+  FLOP counts and the wire layer's measured bytes.
+- :class:`AsyncFederatedEngine` — FedBuff-style buffered asynchrony: the
+  server aggregates every ``buffer_size`` *arrivals*.  Contributions carry
+  the server version they departed from; staleness discounts their
+  aggregation weight (``(1+s)^-staleness_power``) through the existing
+  weighted ``ctx.aggregate``.  Stale FeDLRT coefficient updates are
+  transported between augmented bases by Galerkin projection
+  (``Ū_aᵀ Ū_v · ΔS̃ · V̄_vᵀ V̄_a``) and re-masked to the anchor's active
+  directions, so the zero-inactive-columns invariant survives stale
+  augmented factors.  With identical profiles and ``buffer_size == C`` the
+  engine reduces to the synchronous round sequence **bit-for-bit** (every
+  buffer is one zero-staleness full cohort, executed through the same
+  jitted round step the sync engine caches).
+- :class:`HierarchicalEngine` — two-tier edge→cloud federation: each edge
+  server runs ``edge_rounds`` ordinary synchronous rounds over its own
+  clients (``run_round`` unchanged), then the edge→cloud hop crosses a
+  second :class:`repro.fed.wire.Wire` with its own codec and byte tally;
+  the cloud folds edge models back together by weight-space averaging plus
+  per-factor SVD re-factorization (the Alg.-6 refactorization cost, paid
+  only once per cloud round at the top tier).
+
+The round programs, kernels and codecs are untouched — the engines only
+*compose* them, which is what the RoundProgram/Wire layering exists for.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cost_model
+from repro.core.dlrt import coeff_grad_mask
+from repro.core.factorization import (
+    LowRankFactor,
+    is_factor,
+    materialize,
+    mask_coeff,
+    rank_mask,
+)
+from repro.core.fedlrt import trainable_of
+from repro.core.round import (
+    _per_client_bytes,
+    make_context,
+    run_client_phases,
+    split_server,
+)
+from repro.fed.engine import (
+    FederatedEngine,
+    RoundResult,
+    round_program_for,
+)
+from repro.fed.participation import Participation
+from repro.fed.sim.clock import Timeline, VirtualClock
+from repro.fed.sim.events import (
+    ClientAvailable,
+    ClientDropped,
+    ClientFinished,
+    EventQueue,
+    ServerAggregate,
+)
+from repro.fed.sim.profiles import Fleet, SystemProfile, client_round_flops
+from repro.fed.wire import Wire
+
+
+def _analytic_direction_bytes(params, method: str, correction: str):
+    """Analytic (down, up) per-client bytes — the cold-start latency
+    estimate before any measured round exists (and the only estimate under
+    ``wire_codec=None``)."""
+    try:
+        d = cost_model.wire_round_bytes(params, method, correction=correction)
+        return float(d["down"]), float(d["up"])
+    except (ValueError, TypeError):
+        # unknown/custom method: price the full parameter pytree each way
+        size = float(
+            sum(np.asarray(x).size * np.asarray(x).dtype.itemsize
+                for x in jax.tree.leaves(params))
+        )
+        return size, size
+
+
+def _round_direction_bytes(res: RoundResult, params, method: str, correction: str):
+    """(down, up) per-client bytes of a completed round: measured if the
+    round was metered, else the analytic data-plane volumes."""
+    if res.wire_codec and (res.wire_bytes_down_per_client or res.wire_bytes_up_per_client):
+        return res.wire_bytes_down_per_client, res.wire_bytes_up_per_client
+    return _analytic_direction_bytes(params, method, correction)
+
+
+def _analytic_round_bytes(params, method: str, correction: str) -> float:
+    """Per-client bytes of one round under the paper's multi-message
+    protocol — the ``comm_bytes_per_client`` convention of the round
+    metrics (0.0 for methods the cost model doesn't know)."""
+    try:
+        if method.startswith("fedlrt") and not method.startswith("fedlrt_naive"):
+            return float(cost_model.fedlrt_round_comm_bytes(params, correction))
+        if method in ("fedavg", "fedlin"):
+            return float(cost_model.dense_round_comm_bytes(params, method))
+    except (ValueError, TypeError, KeyError):
+        pass
+    return 0.0
+
+
+def _tree_concat(trees):
+    return jax.tree.map(lambda *xs: np.concatenate([np.asarray(x) for x in xs]), *trees)
+
+
+def _tree_stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _resave_checkpoint_if_due(engine: FederatedEngine):
+    """Checkpoints fire *inside* the base engine's round bookkeeping,
+    before a sim engine assigns the round's timing fields — re-save so the
+    sidecar's history carries ``virtual_seconds``/``t_virtual``/
+    ``staleness_mean`` (idempotent: same path, now-complete history)."""
+    if (
+        engine.checkpoint_dir
+        and engine.checkpoint_every
+        and engine.round_idx % engine.checkpoint_every == 0
+    ):
+        engine._save_checkpoint()
+
+
+def _collect_ranks(params) -> dict:
+    ranks = {}
+
+    def visit(path, x):
+        if is_factor(x):
+            ranks[jax.tree_util.keystr(path)] = np.asarray(x.rank)
+        return x
+
+    jax.tree_util.tree_map_with_path(visit, params, is_leaf=is_factor)
+    return ranks
+
+
+# ---------------------------------------------------------------------------
+# synchronous engine + virtual clock
+# ---------------------------------------------------------------------------
+
+
+class SyncSimEngine(FederatedEngine):
+    """:class:`FederatedEngine` with rounds priced on a virtual clock.
+
+    Numerically identical to the plain engine (it *is* the plain engine);
+    each round additionally advances a :class:`VirtualClock` by the
+    straggler barrier — the slowest active client's
+    ``download + compute + upload`` — and records
+    ``virtual_seconds``/``t_virtual`` on the :class:`RoundResult`.
+    """
+
+    def __init__(self, loss_fn, params, cfg, *, fleet: Optional[Fleet] = None,
+                 flops_fn: Optional[Callable] = None, **kw):
+        super().__init__(loss_fn, params, cfg, **kw)
+        self.fleet = fleet if fleet is not None else Fleet.uniform(cfg.num_clients)
+        if len(self.fleet) != cfg.num_clients:
+            raise ValueError(
+                f"fleet has {len(self.fleet)} profiles for "
+                f"{cfg.num_clients} clients"
+            )
+        self.flops_fn = flops_fn if flops_fn is not None else client_round_flops
+        self.clock = VirtualClock()
+        self.timeline = Timeline()
+
+    def run_round(self, client_batches, *, cohort=None) -> RoundResult:
+        one_client = jax.tree.map(lambda a: np.asarray(a)[0], client_batches)
+        res = super().run_round(client_batches, cohort=cohort)
+        # FLOP pricing only reads static shapes, so post-round params price
+        # the same round the pre-round params would
+        flops = self.flops_fn(self.params, self.cfg, one_client)
+        down, up = _round_direction_bytes(
+            res, self.params, self.method, self.cfg.correction
+        )
+        dt = max(
+            self.fleet[int(c)].round_seconds(flops, down, up) for c in res.cohort
+        )
+        self.clock.advance_to(self.clock.now + dt)
+        res.virtual_seconds = dt
+        res.t_virtual = self.clock.now
+        _resave_checkpoint_if_due(self)
+        self.timeline.record(
+            self.clock.now, "aggregate", round_idx=res.round_idx,
+            detail=f"K={res.cohort_size}",
+        )
+        return res
+
+
+# ---------------------------------------------------------------------------
+# async (buffered) engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Pending:
+    """One in-flight dispatch: which server version it departed from and
+    the client's drawn batch (leaves have leading axis 1)."""
+
+    client: int
+    version: int
+    batch: dict
+    t_dispatch: float
+
+
+class AsyncFederatedEngine(FederatedEngine):
+    """FedBuff-style buffered-asynchronous federated engine.
+
+    Event-driven: every idle client is immediately (re)dispatched from the
+    *current* server params; its arrival lands at
+    ``dispatch + download + compute + upload`` virtual seconds, priced by
+    its :class:`SystemProfile`.  The server folds the buffer into a new
+    model version at every ``buffer_size``-th arrival.
+
+    Aggregation semantics (see the flush methods for the math):
+
+    - arrivals that departed from the current version follow the ordinary
+      synchronous phase path — when the whole buffer is one such group it
+      is executed through the *identical* jitted round step the sync engine
+      uses, so uniform fleets with ``buffer_size == num_clients``
+      reproduce :class:`FederatedEngine` bit-for-bit;
+    - stale arrivals are re-anchored: their local coefficient deltas are
+      transported between augmented bases by Galerkin projection, masked
+      back to the anchor's active directions (the zero-inactive-columns
+      invariant), and aggregated with staleness-discounted weights
+      ``w_c ∝ base_c · (1 + staleness_c)^-staleness_power`` through the
+      same weighted ``ctx.aggregate`` every synchronous round uses.
+
+    Determinism: the event queue tie-breaks by ``(time, client_id, push
+    order)`` and all dropout randomness is seeded per ``(fleet seed,
+    client, dispatch index)`` — two runs with the same seed produce
+    identical event timelines and bit-identical parameters.
+    """
+
+    def __init__(
+        self,
+        loss_fn,
+        params,
+        cfg,
+        *,
+        fleet: Optional[Fleet] = None,
+        buffer_size: Optional[int] = None,
+        staleness_power: float = 0.5,
+        flops_fn: Optional[Callable] = None,
+        method: str = "fedlrt",
+        participation: Optional[Participation] = None,
+        **kw,
+    ):
+        if participation is not None and participation.mode != "full":
+            raise ValueError(
+                "AsyncFederatedEngine derives participation from client "
+                "availability (profiles/dropout), not a Participation policy"
+            )
+        # donation would invalidate the per-version params snapshots that
+        # in-flight (stale) clients still reference
+        kw.pop("donate", None)
+        super().__init__(loss_fn, params, cfg, method=method, donate=False, **kw)
+        self.fleet = fleet if fleet is not None else Fleet.uniform(cfg.num_clients)
+        if len(self.fleet) != cfg.num_clients:
+            raise ValueError(
+                f"fleet has {len(self.fleet)} profiles for "
+                f"{cfg.num_clients} clients"
+            )
+        self.buffer_size = int(buffer_size) if buffer_size else cfg.num_clients
+        if self.buffer_size < 1:
+            raise ValueError(f"buffer_size must be >= 1, got {buffer_size}")
+        self.staleness_power = float(staleness_power)
+        self.flops_fn = flops_fn if flops_fn is not None else client_round_flops
+        self.clock = VirtualClock()
+        self.timeline = Timeline()
+        self._program = round_program_for(method)
+        self._queue = EventQueue()
+        self._buffer: List[_Pending] = []  # arrivals awaiting aggregation
+        self._pending: dict = {}  # (client, dispatch_idx) -> _Pending
+        self._snapshots: dict = {}  # version -> [params, refcount]
+        self._dispatch_count = [0] * cfg.num_clients
+        self._phase_cache: dict = {}
+        self._t_last_flush = 0.0
+
+    # -- event loop --------------------------------------------------------
+
+    def train(self, batcher, num_rounds: int, *, log_every: int = 10, to_device=None):
+        """Run until ``num_rounds`` more server aggregations completed.
+
+        Each ``train`` call is one simulated run: any in-flight work left
+        over from a previous call is discarded (the virtual clock keeps
+        counting up, histories concatenate).
+        """
+        self._batcher = batcher
+        self._queue.clear()
+        self._buffer.clear()
+        self._pending.clear()
+        self._snapshots.clear()
+        target = self.round_idx + num_rounds
+        idle = list(range(self.cfg.num_clients))
+        dispatch_budget = 10_000 * max(num_rounds, 1)
+        while self.round_idx < target:
+            for c in sorted(idle):
+                self._dispatch(c)
+                dispatch_budget -= 1
+            idle.clear()
+            if dispatch_budget < 0:
+                raise RuntimeError(
+                    "async simulation dispatched >10k rounds per aggregation "
+                    "— check the fleet's drop_prob / buffer_size"
+                )
+            if not self._queue:
+                break  # nothing in flight and nothing to dispatch
+            t = self._queue.peek_time()
+            self.clock.advance_to(t)
+            for ev in self._queue.pop_until(t):
+                if isinstance(ev, ClientFinished):
+                    p = self._pending.pop((ev.client_id, ev.dispatch_idx))
+                    self._buffer.append(p)
+                    self.timeline.record(
+                        t, "arrive", client=ev.client_id, round_idx=p.version,
+                        detail=f"stale={self.round_idx - p.version}",
+                    )
+                    idle.append(ev.client_id)
+                    if (
+                        len(self._buffer) >= self.buffer_size
+                        and self.round_idx < target
+                    ):
+                        res = self._flush()
+                        if log_every and res.round_idx % log_every == 0:
+                            print(
+                                f"[async/{self.method}] round {res.round_idx:4d} "
+                                f"loss {res.loss_before:.4f} "
+                                f"t={res.t_virtual:.1f}s "
+                                f"stale={res.staleness_mean:.2f}"
+                            )
+                elif isinstance(ev, ClientDropped):
+                    p = self._pending.pop((ev.client_id, ev.dispatch_idx))
+                    self._release(p.version)
+                    self.timeline.record(
+                        t, "drop", client=ev.client_id, round_idx=p.version
+                    )
+                    delay = self.fleet[ev.client_id].rejoin_delay_sec
+                    if delay > 0:
+                        self._queue.push(
+                            ClientAvailable(time=t + delay, client_id=ev.client_id)
+                        )
+                    else:
+                        idle.append(ev.client_id)
+                elif isinstance(ev, ClientAvailable):
+                    idle.append(ev.client_id)
+        return self.history
+
+    def _dispatch(self, client: int):
+        t = self.clock.now
+        didx = self._dispatch_count[client]
+        self._dispatch_count[client] += 1
+        version = self.round_idx
+        batch = self._batcher.next_round([client])
+        one_client = jax.tree.map(lambda a: np.asarray(a)[0], batch)
+        flops = self.flops_fn(self.params, self.cfg, one_client)
+        down, up = self._bytes_estimate()
+        dt = self.fleet[client].round_seconds(flops, down, up)
+        dropped, frac = self.fleet.drop_draw(client, didx)
+        self._hold(version)
+        self._pending[(client, didx)] = _Pending(
+            client=client, version=version, batch=batch, t_dispatch=t
+        )
+        cls = ClientDropped if dropped else ClientFinished
+        self._queue.push(
+            cls(
+                time=t + (frac * dt if dropped else dt),
+                client_id=client, version=version, dispatch_idx=didx,
+            )
+        )
+        self.timeline.record(t, "dispatch", client=client, round_idx=version)
+
+    def _bytes_estimate(self):
+        """Per-direction bytes for latency pricing: the last round's
+        *measured* wire bytes once one exists (measurement-calibrated
+        scheduling), the analytic data-plane volumes before that."""
+        if self.history:
+            return _round_direction_bytes(
+                self.history[-1], self.params, self.method, self.cfg.correction
+            )
+        return _analytic_direction_bytes(
+            self.params, self.method, self.cfg.correction
+        )
+
+    def _hold(self, version: int):
+        slot = self._snapshots.get(version)
+        if slot is None:
+            self._snapshots[version] = [self.params, 1]
+        else:
+            slot[1] += 1
+
+    def _release(self, version: int):
+        slot = self._snapshots[version]
+        slot[1] -= 1
+        if slot[1] == 0:
+            del self._snapshots[version]
+
+    # -- aggregation -------------------------------------------------------
+
+    def _flush(self) -> RoundResult:
+        t = self.clock.now
+        arrivals = list(self._buffer)
+        self._buffer.clear()
+        staleness = [self.round_idx - a.version for a in arrivals]
+        if all(s == 0 for s in staleness):
+            # the whole buffer departed from the current params: the round
+            # is exactly a synchronous round over the arrival cohort, run
+            # through the same jitted step the sync engine caches — with
+            # identical profiles and buffer_size == C this path reproduces
+            # FederatedEngine bit-for-bit
+            batch = _tree_concat([a.batch for a in arrivals])
+            res = super().run_round(
+                batch, cohort=np.asarray([a.client for a in arrivals])
+            )
+        else:
+            res = self._flush_stale(arrivals)
+        for a in arrivals:
+            self._release(a.version)
+        res.virtual_seconds = t - self._t_last_flush
+        res.t_virtual = t
+        res.staleness_mean = float(np.mean(staleness))
+        self._t_last_flush = t
+        _resave_checkpoint_if_due(self)
+        ev = ServerAggregate(
+            time=t, client_id=-1, version=res.round_idx,
+            buffer_fill=len(arrivals),
+        )
+        self.timeline.record(
+            ev.time, "aggregate", client=ev.client_id, round_idx=ev.version,
+            detail=f"K={ev.buffer_fill};stale={res.staleness_mean:g}",
+        )
+        return res
+
+    def _phase_step(self, k: int, weighted: bool):
+        """Jitted ``broadcast → client_step`` executable for a staleness
+        group of ``k`` clients (cache mirrors the engine's round-step
+        cache; no donation — version snapshots stay live)."""
+        key = (k, weighted)
+        step = self._phase_cache.get(key)
+        if step is None:
+            cfg_k = dataclasses.replace(self.cfg, num_clients=k)
+            program, loss_fn, wire = self._program, self._loss_fn, self.wire
+
+            if weighted:
+                def raw(p, b, r, w):
+                    ctx = make_context(cfg_k, round_idx=r, client_weights=w)
+                    return run_client_phases(program, loss_fn, p, b, ctx, wire=wire)
+            else:
+                def raw(p, b, r):
+                    ctx = make_context(cfg_k, round_idx=r, client_weights=None)
+                    return run_client_phases(program, loss_fn, p, b, ctx, wire=wire)
+
+            step = jax.jit(raw)
+            self._phase_cache[key] = step
+        return step
+
+    def _run_group(self, version: int, group: Sequence[_Pending]):
+        """Client phases for one staleness group, anchored at the params
+        the group departed from.  The broadcast (basis augmentation,
+        variance-correction terms) is computed over the *group* cohort at
+        the departure point — corrections stay anchored to each client's
+        departure basis and sum to zero within the group."""
+        params_v = self._snapshots[version][0]
+        batch = jax.tree.map(jnp.asarray, _tree_concat([p.batch for p in group]))
+        if self.client_weights is not None:
+            w = jnp.asarray(
+                self.client_weights[[p.client for p in group]], jnp.float32
+            )
+            shared, outs, nbytes = self._phase_step(len(group), True)(
+                params_v, batch, jnp.int32(version), w
+            )
+        else:
+            shared, outs, nbytes = self._phase_step(len(group), False)(
+                params_v, batch, jnp.int32(version)
+            )
+        bs, bpc, bup = (float(jax.device_get(b)) for b in nbytes)
+        per_down = float(_per_client_bytes(bs, bpc, len(group)))
+        return shared, outs, per_down * len(group), bup
+
+    def _transport_out(self, out, shared_v, shared_a):
+        """Re-anchor one stale client output into the anchor broadcast's
+        coefficient space, as a pseudo client output.
+
+        FeDLRT: ``S̃_pseudo = S̃⁰_a + mask_a(Ū_aᵀ Ū_v (S̃_c − S̃⁰_v) V̄_vᵀ V̄_a)``
+        — the weight-space delta ``Ū_v ΔS̃ V̄_vᵀ`` Galerkin-projected onto
+        the anchor's augmented basis and re-masked to its active block, so
+        the zero-inactive-columns invariant is preserved exactly.  Dense
+        programs re-anchor the plain parameter delta; programs whose
+        client outputs are absolute (the naive baseline's per-client
+        factors, aggregated in weight space) pass through unchanged.
+        """
+        if isinstance(shared_a, dict) and "aug_params" in shared_a:
+            tr, drift = out
+            aug_a, aug_v = shared_a["aug_params"], shared_v["aug_params"]
+            delta = jax.tree.map(
+                lambda x, y: x - y, tr, trainable_of(aug_v)
+            )
+
+            def one(fa, fv, ra, d):
+                if is_factor(fa):
+                    pu = jnp.einsum("...nr,...nk->...rk", fa.U, fv.U)
+                    pv = jnp.einsum("...nk,...nr->...kr", fv.V, fa.V)
+                    d2 = jnp.einsum("...rk,...kl,...lm->...rm", pu, d, pv)
+                    return ra + mask_coeff(d2, coeff_grad_mask(fa))
+                return ra + d
+
+            pseudo = jax.tree.map(
+                one, aug_a, aug_v, trainable_of(aug_a), delta, is_leaf=is_factor
+            )
+            return pseudo, drift
+        if isinstance(shared_a, dict) and "params0" in shared_a:
+            delta = jax.tree.map(lambda x, y: x - y, out, shared_v["params0"])
+            return jax.tree.map(lambda x, y: x + y, shared_a["params0"], delta)
+        return out  # absolute outputs (weight-space aggregation)
+
+    def _server_delta(self, out, shared_v):
+        """One stale output as a delta in the *current server params'*
+        coefficient space (factor leaves: Galerkin projection onto the
+        truncated basis, masked to its active rank)."""
+        if isinstance(shared_v, dict) and "aug_params" in shared_v:
+            tr, _drift = out
+            aug_v = shared_v["aug_params"]
+            delta = jax.tree.map(lambda x, y: x - y, tr, trainable_of(aug_v))
+
+            def one(ps, fv, d):
+                if is_factor(ps):
+                    pu = jnp.einsum("...nr,...nk->...rk", ps.U, fv.U)
+                    pv = jnp.einsum("...nk,...nr->...kr", fv.V, ps.V)
+                    d2 = jnp.einsum("...rk,...kl,...lm->...rm", pu, d, pv)
+                    return mask_coeff(
+                        d2, rank_mask(ps.rank, ps.r_max, dtype=d2.dtype)
+                    )
+                return d
+
+            return jax.tree.map(one, self.params, aug_v, delta, is_leaf=is_factor)
+        if isinstance(shared_v, dict) and "params0" in shared_v:
+            return jax.tree.map(lambda x, y: x - y, out, shared_v["params0"])
+        raise NotImplementedError(
+            f"method {self.method!r} has no delta form for fully-stale "
+            f"buffered aggregation"
+        )
+
+    def _discounted_weights(self, arrivals: Sequence[_Pending]) -> np.ndarray:
+        base = (
+            self.client_weights[[a.client for a in arrivals]]
+            if self.client_weights is not None
+            else np.ones(len(arrivals), np.float32)
+        )
+        stale = np.asarray(
+            [self.round_idx - a.version for a in arrivals], np.float32
+        )
+        return np.asarray(
+            base * (1.0 + stale) ** (-self.staleness_power), np.float32
+        )
+
+    def _flush_stale(self, arrivals: Sequence[_Pending]) -> RoundResult:
+        """Aggregate a mixed-staleness buffer.
+
+        Groups arrivals by departure version and runs each group's client
+        phases at its own departure params.  If some arrivals departed
+        from the *current* version, that group's broadcast is the anchor:
+        stale outputs become transported pseudo-outputs in the anchor's
+        coefficient space and the whole buffer flows through the ordinary
+        ``aggregate → finalize`` (truncation included) with
+        staleness-discounted weights.  If every arrival is stale (the
+        anchor basis would predate the current params), the buffer is
+        applied FedBuff-style instead: discounted deltas projected onto
+        the current params, no rank adaptation this round.
+        """
+        t0 = time.time()
+        program, cfg = self._program, self.cfg
+        K = len(arrivals)
+        groups: dict = {}
+        for i, a in enumerate(arrivals):
+            groups.setdefault(a.version, []).append(i)
+        shared_by_v, outs_by_i = {}, [None] * K
+        bytes_down = bytes_up = 0.0
+        for v in sorted(groups):
+            idxs = groups[v]
+            shared, outs, bdown, bup = self._run_group(
+                v, [arrivals[i] for i in idxs]
+            )
+            shared_by_v[v] = shared
+            for j, i in enumerate(idxs):
+                outs_by_i[i] = jax.tree.map(lambda x, j=j: x[j], outs)
+            bytes_down += bdown
+            bytes_up += bup
+        w = self._discounted_weights(arrivals)
+        anchor_v = max(groups)
+        if anchor_v == self.round_idx:
+            shared_a = shared_by_v[anchor_v]
+            pseudo = [
+                outs_by_i[i]
+                if arrivals[i].version == anchor_v
+                else self._transport_out(
+                    outs_by_i[i], shared_by_v[arrivals[i].version], shared_a
+                )
+                for i in range(K)
+            ]
+            ctx = make_context(
+                dataclasses.replace(cfg, num_clients=K),
+                round_idx=self.round_idx,
+                client_weights=jnp.asarray(w),
+            )
+            agg = program.aggregate(shared_a, _tree_stack(pseudo), ctx)
+            batches = jax.tree.map(
+                jnp.asarray, _tree_concat([a.batch for a in arrivals])
+            )
+            new_params, metrics = program.finalize(
+                self._loss_fn, self.params, shared_a, agg, batches, ctx
+            )
+            metrics = jax.device_get(metrics)
+            loss_after = (
+                float(metrics["loss_after"]) if "loss_after" in metrics else None
+            )
+            loss_before = float(metrics["loss_before"])
+            comm = float(metrics.get("comm_bytes_per_client", 0.0))
+            comm_eff = float(metrics.get("comm_bytes_per_client_effective", 0.0))
+            ranks = metrics.get("rank", {})
+            if not isinstance(ranks, dict):
+                ranks = {"": ranks}
+            ranks = {k: np.asarray(v) for k, v in ranks.items()}
+        else:
+            # no current-version group: fold discounted deltas into the
+            # current params (pure FedBuff application, basis unchanged)
+            wn = w / w.sum()
+            deltas = [
+                self._server_delta(outs_by_i[i], shared_by_v[arrivals[i].version])
+                for i in range(K)
+            ]
+            dsum = jax.tree.map(
+                lambda *xs: sum(wi * x for wi, x in zip(wn, xs)), *deltas
+            )
+
+            def apply(ps, d):
+                if is_factor(ps):
+                    return dataclasses.replace(ps, S=ps.S + d)
+                return ps + d
+
+            new_params = jax.tree.map(apply, self.params, dsum, is_leaf=is_factor)
+            _, server_state = split_server(shared_by_v[anchor_v])
+            loss_before = (
+                float(jax.device_get(server_state["loss_before"]))
+                if server_state and "loss_before" in server_state
+                else float("nan")
+            )
+            loss_after = None
+            # no finalize ran, so no metrics: price the analytic figure
+            # directly — comm_total_bytes_analytic() must keep counting
+            # these rounds
+            comm = _analytic_round_bytes(
+                self.params, self.method, cfg.correction
+            )
+            comm_eff = 0.0
+            ranks = _collect_ranks(new_params)
+        self.params = new_params
+        res = RoundResult(
+            round_idx=self.round_idx,
+            loss_before=loss_before,
+            loss_after=loss_after,
+            comm_bytes_per_client=comm,
+            ranks=ranks,
+            seconds=time.time() - t0,
+            cohort_size=K,
+            cohort=np.asarray([a.client for a in arrivals]),
+            comm_bytes_per_client_effective=comm_eff,
+            wire_bytes_down_per_client=bytes_down / K if self.wire else 0.0,
+            wire_bytes_up_per_client=bytes_up / K if self.wire else 0.0,
+            wire_codec=self.wire.name if self.wire is not None else "",
+        )
+        self.history.append(res)
+        self.round_idx += 1
+        if (
+            self.checkpoint_dir
+            and self.checkpoint_every
+            and self.round_idx % self.checkpoint_every == 0
+        ):
+            self._save_checkpoint()
+        return res
+
+
+# ---------------------------------------------------------------------------
+# hierarchical (edge → cloud) engine
+# ---------------------------------------------------------------------------
+
+
+class HierarchicalEngine:
+    """Two-tier federation: edge servers aggregate their own clients with
+    ordinary synchronous rounds; the cloud periodically folds the edge
+    models together.
+
+    Clients are split contiguously across ``num_edges`` edges.  One cloud
+    round = every edge receiving the cloud model (through the edge↔cloud
+    :class:`Wire`, its *own* codec and byte tally), running
+    ``edge_rounds`` local :func:`run_round`s over its clients — the round
+    programs and the client-tier wire are reused unchanged — then
+    uploading its model for the cloud aggregate: weight-space weighted
+    mean per factor leaf followed by an SVD re-factorization at the edge
+    ranks' elementwise max (the paper's Alg.-6 refactorization cost, paid
+    once per cloud round at the top tier only).
+
+    Virtual time: edges run in parallel; a cloud round costs
+    ``max_e(downlink_e + Σ local rounds' straggler barriers + uplink_e)``
+    on the clock.
+    """
+
+    def __init__(
+        self,
+        loss_fn,
+        params,
+        cfg,
+        *,
+        method: str = "fedlrt",
+        num_edges: int = 2,
+        edge_rounds: int = 1,
+        fleet: Optional[Fleet] = None,
+        edge_profiles=None,
+        wire_codec="identity",
+        edge_wire_codec=None,
+        client_weights=None,
+        flops_fn: Optional[Callable] = None,
+        eval_fn=None,
+    ):
+        C = cfg.num_clients
+        if not 1 <= num_edges <= C:
+            raise ValueError(f"num_edges must be in [1, {C}], got {num_edges}")
+        self.cfg = cfg
+        self.method = method
+        self.params = params
+        self.num_edges = int(num_edges)
+        self.edge_rounds = int(edge_rounds)
+        self.fleet = fleet if fleet is not None else Fleet.uniform(C)
+        self.flops_fn = flops_fn if flops_fn is not None else client_round_flops
+        self.eval_fn = eval_fn
+        self.history: List[RoundResult] = []
+        self.round_idx = 0
+        self.clock = VirtualClock()
+        self.timeline = Timeline()
+        self.edge_cohorts = [
+            np.asarray(c) for c in np.array_split(np.arange(C), num_edges)
+        ]
+        # the edge↔cloud backhaul: typically far fatter than client links
+        if edge_profiles is None:
+            backhaul = SystemProfile(
+                flops_per_sec=1e12, up_bytes_per_sec=1.25e8,
+                down_bytes_per_sec=1.25e8, latency_sec=0.02, name="backhaul",
+            )
+            edge_profiles = [backhaul] * num_edges
+        self.edge_profiles = list(edge_profiles)
+        self.edge_wire = Wire(
+            edge_wire_codec if edge_wire_codec is not None else wire_codec
+        )
+        self._cloud_bytes = 0.0
+        self._loss_fn = loss_fn
+        self.client_weights = (
+            None if client_weights is None
+            else np.asarray(client_weights, np.float32)
+        )
+        self.edge_engines = []
+        for cohort in self.edge_cohorts:
+            cw = (
+                self.client_weights[cohort]
+                if self.client_weights is not None else None
+            )
+            self.edge_engines.append(
+                FederatedEngine(
+                    loss_fn, params,
+                    dataclasses.replace(cfg, num_clients=len(cohort)),
+                    method=method, wire_codec=wire_codec,
+                    client_weights=cw, donate=False,
+                )
+            )
+        # cloud-side aggregation weight of each edge ∝ its population mass
+        self.edge_weights = np.asarray(
+            [
+                self.client_weights[c].sum()
+                if self.client_weights is not None
+                else float(len(c))
+                for c in self.edge_cohorts
+            ],
+            np.float64,
+        )
+
+    def _edge_hop(self, tree, name):
+        decoded, nbytes = self.edge_wire.roundtrip(tree, name=name)
+        return decoded, float(jax.device_get(jnp.asarray(nbytes)))
+
+    def _cloud_aggregate(self, edge_params: List):
+        """Weight-space weighted mean + per-factor SVD re-factorization."""
+        w = self.edge_weights / self.edge_weights.sum()
+
+        def one(*leaves):
+            f0 = leaves[0]
+            if is_factor(f0):
+                W = sum(wi * materialize(f) for wi, f in zip(w, leaves))
+                P, s, Qt = jnp.linalg.svd(W, full_matrices=False)
+                r_max = f0.r_max
+                rank = leaves[0].rank
+                for f in leaves[1:]:
+                    rank = jnp.maximum(rank, f.rank)
+                keep = rank_mask(rank, r_max, dtype=s.dtype)
+                U = P[..., :, :r_max] * keep[..., None, :]
+                V = jnp.swapaxes(Qt, -1, -2)[..., :, :r_max] * keep[..., None, :]
+                S = (s[..., :r_max] * keep)[..., :, None] * jnp.eye(
+                    r_max, dtype=s.dtype
+                )
+                return LowRankFactor(
+                    U=U.astype(f0.U.dtype), S=S.astype(f0.S.dtype),
+                    V=V.astype(f0.V.dtype), rank=rank,
+                )
+            return sum(wi * x for wi, x in zip(w, leaves))
+
+        return jax.tree.map(one, *edge_params, is_leaf=is_factor)
+
+    def train(self, batcher, num_rounds: int, *, log_every: int = 10, to_device=None):
+        """``num_rounds`` *cloud* rounds (each = ``edge_rounds`` local
+        rounds on every edge plus the edge↔cloud exchange)."""
+        for _ in range(num_rounds):
+            t0 = self.clock.now
+            # cloud → edge broadcast (one payload, received by every edge)
+            down_dec, down_bytes = self._edge_hop(self.params, "edge_down")
+            self._cloud_bytes += down_bytes * self.num_edges
+            edge_times, edge_losses, up_list, up_bytes_list = [], [], [], []
+            for e, eng in enumerate(self.edge_engines):
+                eng.params = down_dec
+                t_e = self.edge_profiles[e].down_seconds(down_bytes)
+                for _j in range(self.edge_rounds):
+                    batch = batcher.next_round(self.edge_cohorts[e])
+                    batch = jax.tree.map(jnp.asarray, batch)
+                    one_client = jax.tree.map(
+                        lambda a: np.asarray(a)[0], batch
+                    )
+                    res = eng.run_round(batch)
+                    flops = self.flops_fn(eng.params, eng.cfg, one_client)
+                    down, up = _round_direction_bytes(
+                        res, eng.params, self.method, self.cfg.correction
+                    )
+                    t_e += max(
+                        self.fleet[int(c)].round_seconds(flops, down, up)
+                        for c in self.edge_cohorts[e]
+                    )
+                edge_losses.append(eng.history[-self.edge_rounds].loss_before)
+                up_dec, up_bytes = self._edge_hop(eng.params, "edge_up")
+                self._cloud_bytes += up_bytes
+                up_list.append(up_dec)
+                up_bytes_list.append(up_bytes)
+                t_e += self.edge_profiles[e].up_seconds(up_bytes)
+                edge_times.append(t_e)
+                self.timeline.record(
+                    t0 + t_e, "edge_up", client=e, round_idx=self.round_idx
+                )
+            self.params = self._cloud_aggregate(up_list)
+            dt = max(edge_times)
+            self.clock.advance_to(t0 + dt)
+            ew = self.edge_weights / self.edge_weights.sum()
+            res = RoundResult(
+                round_idx=self.round_idx,
+                loss_before=float(np.dot(ew, np.asarray(edge_losses))),
+                loss_after=None,
+                comm_bytes_per_client=0.0,
+                ranks=_collect_ranks(self.params),
+                seconds=0.0,
+                cohort_size=self.num_edges,
+                cohort=np.arange(self.num_edges),
+                wire_bytes_down_per_client=down_bytes,
+                wire_bytes_up_per_client=float(np.mean(up_bytes_list)),
+                wire_codec=self.edge_wire.name,
+                virtual_seconds=dt,
+                t_virtual=self.clock.now,
+            )
+            self.history.append(res)
+            self.round_idx += 1
+            self.timeline.record(
+                self.clock.now, "aggregate", round_idx=res.round_idx,
+                detail=f"edges={self.num_edges}",
+            )
+            if log_every and res.round_idx % log_every == 0:
+                print(
+                    f"[hier/{self.method}] cloud round {res.round_idx:4d} "
+                    f"loss {res.loss_before:.4f} t={res.t_virtual:.1f}s"
+                )
+        return self.history
+
+    def comm_total_bytes(self) -> float:
+        """Client-tier measured bytes (summed over the edge engines) plus
+        the edge↔cloud tier's own tally."""
+        return float(
+            sum(e.comm_total_bytes() for e in self.edge_engines)
+            + self._cloud_bytes
+        )
+
+    def evaluate(self, batch) -> float:
+        assert self.eval_fn is not None
+        return float(self.eval_fn(self.params, batch))
+
+
+# ---------------------------------------------------------------------------
+# factory (the CLI surface)
+# ---------------------------------------------------------------------------
+
+
+def make_sim_engine(
+    engine: str,
+    loss_fn,
+    params,
+    cfg,
+    *,
+    sim_profile: Optional[str] = None,
+    fleet: Optional[Fleet] = None,
+    seed: int = 0,
+    buffer_size: Optional[int] = None,
+    staleness_power: float = 0.5,
+    num_edges: int = 2,
+    edge_rounds: int = 1,
+    edge_wire_codec=None,
+    **kw,
+):
+    """Build a simulation engine from CLI-style specs.
+
+    ``engine``: ``sync`` | ``async`` | ``hier``.  ``sim_profile`` is a
+    :meth:`Fleet.from_spec` string (default ``uniform``); an explicit
+    ``fleet`` overrides it.
+    """
+    if fleet is None:
+        fleet = Fleet.from_spec(sim_profile or "uniform", cfg.num_clients, seed=seed)
+    if engine == "sync":
+        return SyncSimEngine(loss_fn, params, cfg, fleet=fleet, **kw)
+    if engine == "async":
+        return AsyncFederatedEngine(
+            loss_fn, params, cfg, fleet=fleet, buffer_size=buffer_size,
+            staleness_power=staleness_power, **kw,
+        )
+    if engine == "hier":
+        # loud, not lossy: the hierarchical engine supports neither
+        # checkpointing nor Participation policies — refusing beats
+        # silently dropping the user's request
+        participation = kw.pop("participation", None)
+        if participation is not None and participation.mode != "full":
+            raise ValueError(
+                "the hier engine runs full participation within each edge; "
+                f"got participation mode {participation.mode!r}"
+            )
+        if kw.pop("checkpoint_dir", None) or kw.pop("checkpoint_every", 0):
+            raise ValueError(
+                "the hier engine does not support checkpointing yet"
+            )
+        return HierarchicalEngine(
+            loss_fn, params, cfg, fleet=fleet, num_edges=num_edges,
+            edge_rounds=edge_rounds, edge_wire_codec=edge_wire_codec, **kw,
+        )
+    raise ValueError(
+        f"unknown engine {engine!r}; expected sync | async | hier"
+    )

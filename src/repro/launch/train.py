@@ -87,6 +87,36 @@ def main(argv=None):
         "downcast[:dtype] | int8_affine | topk_rank (see repro.fed.wire); "
         "comm totals are measured through it",
     )
+    ap.add_argument(
+        "--engine", default="sync", choices=["sync", "async", "hier"],
+        help="aggregation engine: sync (one barrier per round), async "
+        "(FedBuff-style buffered, --async-buffer arrivals per aggregate), "
+        "hier (two-tier edge→cloud; --edges/--edge-rounds)",
+    )
+    ap.add_argument(
+        "--sim-profile", type=str, default=None,
+        help="client system-profile fleet for virtual-clock pricing: "
+        "uniform | straggler[:FRAC[,SLOWDOWN]] | lognormal[:SIGMA] "
+        "(optionally prefixed dropout:P,).  Implied 'uniform' for the "
+        "async/hier engines; omit entirely for the plain sync engine",
+    )
+    ap.add_argument(
+        "--async-buffer", type=int, default=None,
+        help="async engine: aggregate every K arrivals (default: #clients)",
+    )
+    ap.add_argument(
+        "--staleness-power", type=float, default=0.5,
+        help="async engine: staleness discount (1+s)^-p on stale updates",
+    )
+    ap.add_argument("--edges", type=int, default=2,
+                    help="hier engine: number of edge servers")
+    ap.add_argument("--edge-rounds", type=int, default=1,
+                    help="hier engine: local rounds per cloud round")
+    ap.add_argument(
+        "--edge-wire-codec", type=str, default=None,
+        help="hier engine: codec for the edge→cloud hop (default: "
+        "--wire-codec)",
+    )
     ap.add_argument("--rounds", type=int, default=40)
     ap.add_argument("--local-steps", type=int, default=4)
     ap.add_argument("--batch", type=int, default=4)
@@ -126,21 +156,55 @@ def main(argv=None):
         tau=args.tau,
     )
     participation = Participation.from_spec(args.participation, seed=args.seed)
-    eng = FederatedEngine(
-        model.loss_fn, params, fc, method=args.method,
-        participation=participation,
-        client_weights=partition_sizes(parts) if args.weighted else None,
-        checkpoint_dir=args.checkpoint_dir,
-        checkpoint_every=20 if args.checkpoint_dir else 0,
-        wire_codec=args.wire_codec,
-    )
+    client_weights = partition_sizes(parts) if args.weighted else None
+    if args.engine != "sync" or args.sim_profile is not None:
+        from repro.fed.sim import make_sim_engine
+
+        # participation and checkpointing always pass through: engines
+        # that can't honor them refuse loudly instead of dropping them
+        kw = dict(
+            sim_profile=args.sim_profile, seed=args.seed,
+            method=args.method, wire_codec=args.wire_codec,
+            client_weights=client_weights,
+            participation=participation,
+            checkpoint_dir=args.checkpoint_dir,
+            checkpoint_every=20 if args.checkpoint_dir else 0,
+        )
+        if args.engine == "async":
+            kw.update(
+                buffer_size=args.async_buffer,
+                staleness_power=args.staleness_power,
+            )
+        elif args.engine == "hier":
+            kw.update(
+                num_edges=args.edges, edge_rounds=args.edge_rounds,
+                edge_wire_codec=args.edge_wire_codec,
+            )
+        eng = make_sim_engine(args.engine, model.loss_fn, params, fc, **kw)
+    else:
+        eng = FederatedEngine(
+            model.loss_fn, params, fc, method=args.method,
+            participation=participation,
+            client_weights=client_weights,
+            checkpoint_dir=args.checkpoint_dir,
+            checkpoint_every=20 if args.checkpoint_dir else 0,
+            wire_codec=args.wire_codec,
+        )
     hist = eng.train(batcher, args.rounds, log_every=args.log_every)
     mean_cohort = np.mean([r.cohort_size for r in hist])
+    timing = (
+        f"; virtual time {hist[-1].t_virtual:.1f}s [{args.engine}]"
+        if hist[-1].t_virtual else ""
+    )
+    analytic = (
+        f" vs {eng.comm_total_bytes_analytic()/1e6:.1f} MB analytic"
+        if hasattr(eng, "comm_total_bytes_analytic") else ""
+    )
     print(
         f"done: loss {hist[0].loss_before:.4f} → {hist[-1].loss_before:.4f}; "
         f"total comm {eng.comm_total_bytes()/1e6:.1f} MB measured "
-        f"[{args.wire_codec}] vs {eng.comm_total_bytes_analytic()/1e6:.1f} MB "
-        f"analytic (mean cohort {mean_cohort:.1f}/{args.clients})"
+        f"[{args.wire_codec}]{analytic} (mean cohort {mean_cohort:.1f}/"
+        f"{args.clients}){timing}"
     )
     return hist
 

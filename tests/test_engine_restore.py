@@ -80,6 +80,78 @@ def test_restore_replays_bit_identical_rounds(tmp_path):
     assert eng_b2.comm_total_bytes() == eng_a.comm_total_bytes()
 
 
+def test_state_sidecar_is_versioned_and_json_safe(tmp_path):
+    """The sidecar stores the history as versioned JSON-safe dicts — no
+    pickled RoundResult objects, so ``restore()`` survives dataclass
+    refactors (field additions like the sim timing fields)."""
+    import json
+
+    from repro.fed.engine import STATE_VERSION
+
+    f, cfg, batcher = _make()
+    eng = _engine(f, cfg, tmp_path, Participation())
+    eng.train(batcher, 2, log_every=0)
+    state = np.load(
+        str(tmp_path / "round_000002.npz.state.npy"), allow_pickle=True
+    ).item()
+    assert state["version"] == STATE_VERSION
+    json.dumps(state["history"])  # would raise on any non-JSON-safe entry
+    assert all(isinstance(r, dict) for r in state["history"])
+
+
+def test_history_state_tolerates_field_drift():
+    """A sidecar written by a different RoundResult vintage still loads:
+    unknown fields are dropped, missing fields take defaults."""
+    from repro.fed import RoundResult
+    from repro.fed.engine import history_from_state, history_to_state
+
+    r = RoundResult(
+        round_idx=3, loss_before=1.5, loss_after=1.2,
+        comm_bytes_per_client=10.0, ranks={"w": np.asarray(4.0)},
+        seconds=0.1, cohort_size=2, cohort=np.asarray([0, 2]),
+        t_virtual=7.5,
+    )
+    state = history_to_state([r])
+    # a field from a future vintage + one this vintage never wrote
+    state[0]["from_the_future"] = 42
+    del state[0]["staleness_mean"]
+    (restored,) = history_from_state(state)
+    assert restored.round_idx == 3
+    assert restored.loss_before == 1.5
+    assert restored.t_virtual == 7.5
+    assert restored.staleness_mean == 0.0  # default back-filled
+    np.testing.assert_array_equal(restored.cohort, r.cohort)
+    np.testing.assert_array_equal(restored.ranks["w"], r.ranks["w"])
+
+
+def test_restore_loads_legacy_pickled_sidecar(tmp_path):
+    """Pre-versioned checkpoints (history pickled as RoundResult objects)
+    still restore."""
+    from repro.fed import RoundResult
+
+    f, cfg, batcher = _make()
+    eng = _engine(f, cfg, tmp_path, Participation())
+    eng.train(batcher, 2, log_every=0)
+    legacy_history = [
+        RoundResult(
+            round_idx=i, loss_before=2.0 - i, loss_after=None,
+            comm_bytes_per_client=10.0, ranks={}, seconds=0.0, cohort_size=C,
+        )
+        for i in range(2)
+    ]
+    ckpt = str(tmp_path / "round_000002.npz")
+    np.save(  # the legacy format: no version tag, pickled dataclasses
+        ckpt + ".state.npy",
+        np.asarray({"history": legacy_history}, dtype=object),
+        allow_pickle=True,
+    )
+    f2, cfg2, _ = _make()
+    eng2 = FederatedEngine(_loss, f2, cfg2, method="fedlrt", donate=False)
+    eng2.restore(ckpt)
+    assert [r.round_idx for r in eng2.history] == [0, 1]
+    assert eng2.comm_total_bytes() == 10.0 * C * 2
+
+
 def test_restore_without_state_file_still_sets_round(tmp_path):
     f, cfg, batcher = _make()
     eng = _engine(f, cfg, tmp_path, Participation())

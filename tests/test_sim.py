@@ -1,0 +1,312 @@
+"""Event-driven system simulator (repro.fed.sim).
+
+Pins the subsystem's contracts:
+
+- profile/fleet pricing arithmetic and seeded determinism,
+- the event queue's (time, client_id, push-order) tie-break,
+- the **participation-style invariant of asynchrony**: identical profiles
+  + buffer K = cohort size reproduce the synchronous engine bit-for-bit,
+- determinism: same seed ⇒ identical event timelines and final params,
+- the straggler headline: async reaches the sync engine's loss in
+  strictly less virtual wall-clock under a 10×-slow straggler,
+- hierarchical: a single edge's cloud refactorization preserves the
+  aggregated weights,
+- the round-method registry.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FedConfig, init_factor, lr_matmul
+from repro.data import FederatedBatcher, partition_iid
+from repro.fed import FederatedEngine, Participation
+from repro.fed.engine import (
+    ROUND_METHODS,
+    register_round_method,
+    round_program_for,
+)
+from repro.fed.sim import (
+    AsyncFederatedEngine,
+    ClientFinished,
+    EventQueue,
+    Fleet,
+    HierarchicalEngine,
+    SyncSimEngine,
+    SystemProfile,
+)
+from repro.core.factorization import materialize
+
+C, DIM, DOUT = 4, 16, 8
+
+
+def _loss(f, batch):
+    pred = lr_matmul(batch["x"], f)
+    return jnp.mean(jnp.square(pred - batch["y"]))
+
+
+def _make(seed=0, lr=0.05):
+    """Planted low-rank least squares: strongly convex in the coefficients,
+    so losses decrease reliably under every engine."""
+    rng = np.random.default_rng(seed)
+    w_star = (
+        rng.normal(size=(DIM, 3)) @ rng.normal(size=(3, DOUT))
+    ).astype(np.float32) / np.sqrt(DIM)
+    x = rng.normal(size=(1024, DIM)).astype(np.float32)
+    y = x @ w_star
+    parts = partition_iid(len(x), C, seed=seed)
+    batcher = FederatedBatcher({"x": x, "y": y}, parts, batch_size=32, seed=seed)
+    f = init_factor(jax.random.PRNGKey(seed), DIM, DOUT, r_max=6, init_rank=6)
+    cfg = FedConfig(
+        num_clients=C, s_star=3, lr=lr, correction="simplified", tau=0.05,
+        eval_after=False,
+    )
+    return f, cfg, batcher
+
+
+# ---------------------------------------------------------------------------
+# profiles / fleet
+# ---------------------------------------------------------------------------
+
+
+def test_profile_pricing_arithmetic():
+    p = SystemProfile(
+        flops_per_sec=1e9, up_bytes_per_sec=1e6, down_bytes_per_sec=2e6,
+        latency_sec=0.1,
+    )
+    assert p.compute_seconds(2e9) == pytest.approx(2.0)
+    assert p.down_seconds(2e6) == pytest.approx(0.1 + 1.0)
+    assert p.up_seconds(1e6) == pytest.approx(0.1 + 1.0)
+    assert p.round_seconds(2e9, 2e6, 1e6) == pytest.approx(1.1 + 2.0 + 1.1)
+    slow = p.slowed(10.0)
+    assert slow.round_seconds(2e9, 2e6, 1e6) == pytest.approx(10 * (1.1 + 2.0 + 1.1))
+
+
+def test_fleet_from_spec():
+    flat = Fleet.from_spec("uniform", 4)
+    assert len(flat) == 4 and flat.is_uniform()
+    strag = Fleet.from_spec("straggler:0.25,10", 4)
+    assert not strag.is_uniform()
+    # the last ceil(0.25·4)=1 client is the straggler, deterministically
+    assert strag[3].flops_per_sec == pytest.approx(strag[0].flops_per_sec / 10)
+    assert all(strag[c] == strag[0] for c in range(3))
+    # lognormal draws are seeded: same seed ⇒ same fleet
+    a = Fleet.from_spec("lognormal:0.6", 8, seed=3)
+    b = Fleet.from_spec("lognormal:0.6", 8, seed=3)
+    assert [p.flops_per_sec for p in a.profiles] == [
+        p.flops_per_sec for p in b.profiles
+    ]
+    # dropout prefix modifies the base profile; draws are seeded
+    d = Fleet.from_spec("dropout:0.5,uniform", 4, seed=1)
+    assert d[0].drop_prob == 0.5
+    assert d.drop_draw(2, 7) == d.drop_draw(2, 7)
+    with pytest.raises(ValueError):
+        Fleet.from_spec("warp_drive", 4)
+
+
+def test_event_queue_tiebreak_time_then_client():
+    q = EventQueue()
+    # pushed in reverse client order at the same timestamp
+    for c in (3, 1, 2, 0):
+        q.push(ClientFinished(time=1.0, client_id=c))
+    q.push(ClientFinished(time=0.5, client_id=9))
+    order = [(e.time, e.client_id) for e in (q.pop() for _ in range(5))]
+    assert order == [(0.5, 9), (1.0, 0), (1.0, 1), (1.0, 2), (1.0, 3)]
+    # same (time, client): FIFO by push order
+    q.push(ClientFinished(time=2.0, client_id=5, dispatch_idx=0))
+    q.push(ClientFinished(time=2.0, client_id=5, dispatch_idx=1))
+    assert [q.pop().dispatch_idx, q.pop().dispatch_idx] == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# async engine invariants
+# ---------------------------------------------------------------------------
+
+
+def test_async_uniform_full_buffer_matches_sync_bit_for_bit():
+    f, cfg, b_sync = _make()
+    sync = FederatedEngine(_loss, f, cfg, method="fedlrt", donate=False)
+    sync.train(b_sync, 4, log_every=0)
+
+    f2, cfg2, b_async = _make()
+    anc = AsyncFederatedEngine(
+        _loss, f2, cfg2, method="fedlrt",
+        fleet=Fleet.uniform(C), buffer_size=C,
+    )
+    anc.train(b_async, 4, log_every=0)
+
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+        sync.params, anc.params,
+    )
+    assert [r.loss_before for r in anc.history] == [
+        r.loss_before for r in sync.history
+    ]
+    assert all(r.staleness_mean == 0.0 for r in anc.history)
+    # and the async run carries virtual timing the sync engine doesn't
+    assert anc.history[-1].t_virtual > 0.0
+
+
+def test_async_same_seed_identical_timeline_and_params():
+    def run():
+        f, cfg, batcher = _make(seed=2)
+        fleet = Fleet.from_spec("dropout:0.15,straggler:0.5,4", C, seed=11)
+        eng = AsyncFederatedEngine(
+            _loss, f, cfg, method="fedlrt", fleet=fleet, buffer_size=2,
+        )
+        eng.train(batcher, 6, log_every=0)
+        return eng
+
+    a, b = run(), run()
+    assert a.timeline.keys() == b.timeline.keys()
+    assert len(a.timeline.of_kind("aggregate")) == 6
+    jax.tree.map(
+        lambda x, y: np.testing.assert_array_equal(np.asarray(x), np.asarray(y)),
+        a.params, b.params,
+    )
+    assert [r.t_virtual for r in a.history] == [r.t_virtual for r in b.history]
+
+
+def _time_to(hist, target):
+    t_prev = 0.0
+    for r in hist:
+        if r.loss_before <= target:
+            return t_prev
+        t_prev = r.t_virtual
+    return float("inf")
+
+
+def test_async_beats_sync_under_straggler():
+    """The acceptance headline: with a 10×-slow straggler, buffered async
+    reaches the sync engine's final loss in strictly less virtual time."""
+    fleet = Fleet.from_spec("straggler:0.25,10", C)
+    f, cfg, b_sync = _make(seed=1)
+    sync = SyncSimEngine(_loss, f, cfg, method="fedlrt", fleet=fleet, donate=False)
+    sync.train(b_sync, 6, log_every=0)
+    target = sync.history[-1].loss_before
+    assert target < sync.history[0].loss_before  # the problem does train
+
+    f2, cfg2, b_async = _make(seed=1)
+    anc = AsyncFederatedEngine(
+        _loss, f2, cfg2, method="fedlrt",
+        fleet=Fleet.from_spec("straggler:0.25,10", C), buffer_size=2,
+    )
+    anc.train(b_async, 12, log_every=0)
+
+    t_sync = _time_to(sync.history, target)
+    t_async = _time_to(anc.history, target)
+    assert t_async < t_sync, (t_async, t_sync)
+
+
+def test_async_rejects_partial_participation():
+    f, cfg, _ = _make()
+    with pytest.raises(ValueError, match="availability"):
+        AsyncFederatedEngine(
+            _loss, f, cfg, method="fedlrt",
+            participation=Participation(mode="uniform", cohort_size=2),
+        )
+
+
+def test_async_stale_rounds_keep_invariants():
+    """Mixed-staleness flushes preserve the factor invariant: coefficients
+    zero outside the active block, basis columns beyond rank zero."""
+    f, cfg, batcher = _make(seed=3)
+    eng = AsyncFederatedEngine(
+        _loss, f, cfg, method="fedlrt",
+        fleet=Fleet.from_spec("straggler:0.25,10", C), buffer_size=2,
+    )
+    eng.train(batcher, 8, log_every=0)
+    assert any(r.staleness_mean > 0 for r in eng.history)
+    p = eng.params
+    r = int(p.rank)
+    S = np.asarray(p.S)
+    np.testing.assert_allclose(S[r:, :], 0.0, atol=1e-6)
+    np.testing.assert_allclose(S[:, r:], 0.0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(p.U)[:, r:], 0.0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(p.V)[:, r:], 0.0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# hierarchical engine
+# ---------------------------------------------------------------------------
+
+
+def test_hier_single_edge_refactorization_preserves_weights():
+    """E=1: one cloud round = one sync round + an SVD re-factorization of
+    the same model — the materialized weights must agree."""
+    f, cfg, b_hier = _make()
+    hier = HierarchicalEngine(
+        _loss, f, cfg, method="fedlrt", num_edges=1, edge_rounds=1,
+        fleet=Fleet.uniform(C),
+    )
+    hier.train(b_hier, 1, log_every=0)
+
+    f2, cfg2, b_sync = _make()
+    sync = FederatedEngine(_loss, f2, cfg2, method="fedlrt", donate=False)
+    sync.train(b_sync, 1, log_every=0)
+
+    np.testing.assert_allclose(
+        np.asarray(materialize(hier.params)),
+        np.asarray(materialize(sync.params)),
+        atol=1e-5,
+    )
+    assert hier.history[0].loss_before == sync.history[0].loss_before
+    assert hier.comm_total_bytes() > sync.comm_total_bytes()  # + the backhaul
+    assert hier.history[-1].t_virtual > 0.0
+
+
+def test_hier_edges_partition_population():
+    f, cfg, batcher = _make()
+    hier = HierarchicalEngine(
+        _loss, f, cfg, method="fedlrt", num_edges=2, edge_rounds=2,
+        fleet=Fleet.uniform(C),
+    )
+    assert sorted(np.concatenate(hier.edge_cohorts).tolist()) == list(range(C))
+    hier.train(batcher, 2, log_every=0)
+    assert len(hier.history) == 2
+    # every edge ran edge_rounds local rounds per cloud round
+    assert all(len(e.history) == 4 for e in hier.edge_engines)
+
+
+# ---------------------------------------------------------------------------
+# round-method registry
+# ---------------------------------------------------------------------------
+
+
+def test_round_method_registry():
+    assert set(ROUND_METHODS) >= {"fedlrt", "fedavg", "fedlin", "fedlrt_naive"}
+    with pytest.raises(ValueError, match="already registered"):
+        register_round_method("fedlrt", ROUND_METHODS["fedlrt"])
+
+    def custom_round(loss_fn, params, batches, cfg, **kw):
+        kw.pop("wire", None)
+        return ROUND_METHODS["fedavg"](loss_fn, params, batches, cfg, **kw)
+
+    register_round_method("custom_avg", custom_round)
+    try:
+        f, cfg, batcher = _make()
+        dense = {"w": 0.1 * np.eye(DIM, DOUT, dtype=np.float32)}
+
+        def dense_loss(p, batch):
+            return jnp.mean(jnp.square(batch["x"] @ p["w"] - batch["y"]))
+
+        eng = FederatedEngine(
+            dense_loss, jax.tree.map(jnp.asarray, dense),
+            dataclasses.replace(cfg, correction="none"),
+            method="custom_avg", wire_codec=None, donate=False,
+        )
+        eng.train(batcher, 1, log_every=0)
+        assert len(eng.history) == 1
+        # no program registered → phase-level engines must refuse
+        with pytest.raises(ValueError, match="no registered RoundProgram"):
+            round_program_for("custom_avg")
+    finally:
+        del ROUND_METHODS["custom_avg"]
+
+
+def test_unknown_method_error_lists_registry():
+    f, cfg, _ = _make()
+    with pytest.raises(ValueError, match="method must be one of"):
+        FederatedEngine(_loss, f, cfg, method="nope")

@@ -335,6 +335,40 @@ def test_engine_wire_none_falls_back_to_analytic():
     assert eng.comm_total_bytes() == pytest.approx(eng.comm_total_bytes_analytic())
 
 
+def test_comm_total_bytes_mixed_history():
+    """The documented best-effort contract for *mixed* histories: metered
+    rounds contribute their measured bytes, while unmetered rounds —
+    restored from a pre-wire checkpoint, or run with ``wire_codec=None``
+    — contribute the analytic ``comm_bytes_per_client`` instead.  The
+    analytic total stays uniform across all three."""
+    from repro.fed import RoundResult
+
+    eng, _ = _mlp_engine(None, rounds=0)
+    pre_wire = RoundResult(  # restored from a pre-wire checkpoint: no
+        round_idx=0,         # wire fields at all beyond their defaults
+        loss_before=1.0, loss_after=None,
+        comm_bytes_per_client=100.0, ranks={}, seconds=0.0, cohort_size=2,
+    )
+    metered = RoundResult(
+        round_idx=1, loss_before=0.9, loss_after=None,
+        comm_bytes_per_client=999.0,  # analytic — must NOT enter the total
+        ranks={}, seconds=0.0, cohort_size=3,
+        wire_bytes_down_per_client=30.0, wire_bytes_up_per_client=20.0,
+        wire_codec="identity",
+    )
+    unmetered = RoundResult(  # wire_codec=None round: raw pytrees
+        round_idx=2, loss_before=0.8, loss_after=None,
+        comm_bytes_per_client=50.0, ranks={}, seconds=0.0, cohort_size=4,
+    )
+    eng.history = [pre_wire, metered, unmetered]
+    assert eng.comm_total_bytes() == pytest.approx(
+        100.0 * 2 + (30.0 + 20.0) * 3 + 50.0 * 4
+    )
+    assert eng.comm_total_bytes_analytic() == pytest.approx(
+        100.0 * 2 + 999.0 * 3 + 50.0 * 4
+    )
+
+
 def test_int8_uplink_compression_headline():
     """≥ 3× measured uplink byte reduction vs identity, with the round
     still training (the full accuracy-delta sweep lives in bench_wire)."""
