@@ -6,92 +6,69 @@ simplified correction should track FedLin and beat uncorrected FeDLRT /
 FedAvg at larger client counts, while communicating a fraction of the
 bytes.
 
-:func:`fig5_proxy` optionally takes a ``participation`` policy; with
-uniform-k sampling the emitted ``comm_MB`` (server-side total) drops by
-k/C while accuracy degrades gracefully — :func:`fig5_partial` emits that
-comparison directly.
+Every cell of the sweep is ``dataclasses.replace`` on one base
+:class:`repro.api.ExperimentSpec`, built and run through
+:func:`repro.api.build` — no per-driver engine plumbing.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.api import (
+    DataSpec,
+    ExperimentSpec,
+    FedSpec,
+    ModelSpec,
+    ParticipationSpec,
+    build,
+)
 
-from repro.core import FedConfig, init_factor
-from repro.data import FederatedBatcher, make_classification_data, partition_dirichlet
-from repro.fed import FederatedEngine, Participation
-
-DIM, CLASSES, HID = 64, 10, 256
-
-
-def _init(key, lowrank):
-    k1, k2 = jax.random.split(key)
-    w1 = (
-        init_factor(k1, DIM, HID, r_max=24, init_rank=24)
-        if lowrank
-        else 0.18 * jax.random.normal(k1, (DIM, HID))
-    )
-    return {
-        "w1": w1,
-        "b1": jnp.zeros((HID,)),
-        "w2": 0.06 * jax.random.normal(k2, (HID, CLASSES)),
-        "b2": jnp.zeros((CLASSES,)),
-    }
+#: the CV-proxy base scenario shared by the fig-5 sweeps (bench_wire and
+#: bench_sim derive theirs from this too)
+BASE = ExperimentSpec(
+    name="fig5-cv-proxy",
+    log_every=0,
+    model=ModelSpec(kind="mlp", dim=64, classes=10, hidden=256, r_max=24,
+                    kernels="off"),
+    data=DataSpec(kind="classification", batch=64, num_points=10_240,
+                  noise=0.3, planted_rank=6, partition="dirichlet:0.3",
+                  holdout=2048),
+    fed=FedSpec(method="fedlrt", correction="simplified", clients=4,
+                local_steps=0, lr=5e-2, tau=0.03, eval_after=False),
+)
 
 
-def _fwd(p, x):
-    if hasattr(p["w1"], "U"):
-        h = ((x @ p["w1"].U) @ p["w1"].S) @ p["w1"].V.T
-    else:
-        h = x @ p["w1"]
-    h = jax.nn.relu(h + p["b1"])
-    return h @ p["w2"] + p["b2"]
-
-
-def _loss(p, batch):
-    logp = jax.nn.log_softmax(_fwd(p, batch["x"]))
-    return -jnp.mean(jnp.take_along_axis(logp, batch["y"][:, None], -1))
-
-
-def _data():
-    x, y = make_classification_data(
-        dim=DIM, num_classes=CLASSES, rank=6, num_points=10_240, noise=0.3, seed=0
-    )
-    xt, yt = jnp.asarray(x[-2048:]), jnp.asarray(y[-2048:])
-    return x[:-2048], y[:-2048], xt, yt
-
-
-def _run_one(method, C, rounds, x, y, xt, yt, participation=None):
-    parts = partition_dirichlet(y, C, alpha=0.3, seed=0)
-    batcher = FederatedBatcher({"x": x, "y": y}, parts, batch_size=64, seed=0)
+def spec_for(method: str, C: int, rounds: int, participation=None) -> ExperimentSpec:
     corr = method.split(":")[1] if ":" in method else "none"
-    cfg = FedConfig(
-        num_clients=C, s_star=max(240 // C, 1), lr=5e-2, tau=0.03,
-        correction=corr, eval_after=False,
+    kind = method.split(":")[0]
+    if participation is not None and participation.cohort_size is not None:
+        # sweeping C below the requested cohort: cap at the population (the
+        # legacy min(k, C) behaviour; the spec itself rejects k > C)
+        participation = dataclasses.replace(
+            participation, cohort_size=min(participation.cohort_size, C)
+        )
+    return BASE.replace(
+        rounds=rounds,
+        fed=dataclasses.replace(BASE.fed, method=kind, correction=corr, clients=C),
+        participation=participation or ParticipationSpec(),
     )
-    lowrank = method.startswith("fedlrt")
-    params = _init(jax.random.PRNGKey(0), lowrank)
-    eng = FederatedEngine(
-        _loss, params, cfg,
-        method="fedlrt" if lowrank else method,
-        participation=participation,
-    )
+
+
+def _run_one(spec: ExperimentSpec):
+    exp = build(spec)
     t0 = time.perf_counter()
-    eng.train(batcher, rounds, log_every=0)
-    us = (time.perf_counter() - t0) / rounds * 1e6
-    acc = float(jnp.mean(jnp.argmax(_fwd(eng.params, xt), -1) == yt))
-    return acc, eng.comm_total_bytes(), us
+    exp.run()
+    us = (time.perf_counter() - t0) / spec.rounds * 1e6
+    return exp.evaluate(), exp.comm_total_bytes(), us
 
 
 def fig5_proxy(rounds: int = 25, clients=(2, 4, 8), emit=print, participation=None):
-    x, y, xt, yt = _data()
     results = {}
     for method in ("fedavg", "fedlin", "fedlrt:none", "fedlrt:simplified"):
         for C in clients:
             acc, comm, us = _run_one(
-                method, C, rounds, x, y, xt, yt, participation=participation
+                spec_for(method, C, rounds, participation=participation)
             )
             results[(method, C)] = (acc, comm)
             emit(
@@ -107,17 +84,14 @@ def fig5_partial(rounds: int = 25, C: int = 8, cohorts=(8, 4, 2), emit=print):
     Server comm scales with k; FeDLRT's variance correction keeps accuracy
     close to the full-participation run down to small cohorts.
     """
-    x, y, xt, yt = _data()
     results = {}
     for method in ("fedavg", "fedlrt:simplified"):
         for k in cohorts:
             part = (
                 None if k >= C
-                else Participation(mode="uniform", cohort_size=k, seed=0)
+                else ParticipationSpec(mode="uniform", cohort_size=k)
             )
-            acc, comm, us = _run_one(
-                method, C, rounds, x, y, xt, yt, participation=part
-            )
+            acc, comm, us = _run_one(spec_for(method, C, rounds, participation=part))
             results[(method, k)] = (acc, comm)
             emit(
                 f"fig5partial_{method.replace(':','_')}_k{k}of{C},{us:.1f},"

@@ -15,69 +15,54 @@ virtual wall-clock — the sync barrier waits for the straggler every
 round, the buffer doesn't (pinned in miniature by
 ``tests/test_sim.py::test_async_beats_sync_under_straggler``).
 
+Every cell is ``dataclasses.replace`` of the engine/wire/sim sections on
+the shared CV base spec (:data:`benchmarks.bench_cv.BASE`); engines come
+exclusively from :func:`repro.api.build`.
+
 Emitted as ``sim_<engine>_<codec>_<severity>,us_per_round,derived`` CSV
 rows like every other benchmark in this harness.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import FedConfig, init_factor
-from repro.data import FederatedBatcher, make_classification_data, partition_dirichlet
-from repro.fed.sim import make_sim_engine
-
-DIM, CLASSES, HID = 64, 10, 256
+from benchmarks.bench_cv import BASE
+from repro.api import EngineSpec, SimSpec, WireSpec, build
 
 ENGINES = ("sync", "async", "hier")
 CODECS = ("identity", "int8_affine")
 SEVERITIES = (("flat", "uniform"), ("strag10", "straggler:0.25,10"))
 
 
-def _init(key):
-    k1, k2 = jax.random.split(key)
-    return {
-        "w1": init_factor(k1, DIM, HID, r_max=24, init_rank=24),
-        "b1": jnp.zeros((HID,)),
-        "w2": 0.06 * jax.random.normal(k2, (HID, CLASSES)),
-        "b2": jnp.zeros((CLASSES,)),
-    }
-
-
-def _loss(p, batch):
-    h = ((batch["x"] @ p["w1"].U) @ p["w1"].S) @ p["w1"].V.T
-    h = jax.nn.relu(h + p["b1"])
-    logits = h @ p["w2"] + p["b2"]
-    logp = jax.nn.log_softmax(logits)
-    return -jnp.mean(jnp.take_along_axis(logp, batch["y"][:, None], -1))
-
-
-def _run_one(engine: str, codec: str, profile: str, rounds: int, C: int, x, y):
-    parts = partition_dirichlet(y, C, alpha=0.3, seed=0)
-    batcher = FederatedBatcher({"x": x, "y": y}, parts, batch_size=64, seed=0)
-    cfg = FedConfig(
-        num_clients=C, s_star=max(240 // C, 1), lr=5e-2, tau=0.03,
-        correction="simplified", eval_after=False,
-    )
-    kw = {}
-    n_aggregates = rounds
+def _spec(engine: str, codec: str, profile: str, rounds: int, C: int):
     if engine == "async":
         # half-cohort buffer: aggregates keep flowing while stragglers lag;
         # 2× the aggregations keeps the *client-round* budget equal to sync
-        kw = dict(buffer_size=max(C // 2, 1))
-        n_aggregates = rounds * (C // kw["buffer_size"])
+        eng = EngineSpec(kind="async", buffer_size=max(C // 2, 1))
+        n_aggregates = rounds * (C // eng.buffer_size)
     elif engine == "hier":
-        kw = dict(num_edges=2, edge_rounds=1)
-    eng = make_sim_engine(
-        engine, _loss, _init(jax.random.PRNGKey(0)), cfg,
-        sim_profile=profile, method="fedlrt", wire_codec=codec, **kw,
+        eng = EngineSpec(kind="hier", edges=2, edge_rounds=1)
+        n_aggregates = rounds
+    else:
+        eng = EngineSpec(kind="sync")
+        n_aggregates = rounds
+    return BASE.replace(
+        name="sim-pareto",
+        rounds=n_aggregates,
+        fed=dataclasses.replace(BASE.fed, clients=C),
+        engine=eng,
+        wire=WireSpec(codec=codec),
+        sim=SimSpec(profile=profile),
     )
+
+
+def _run_one(engine: str, codec: str, profile: str, rounds: int, C: int):
+    exp = build(_spec(engine, codec, profile, rounds, C))
     t0 = time.perf_counter()
-    hist = eng.train(batcher, n_aggregates, log_every=0)
+    hist = exp.run()
     us = (time.perf_counter() - t0) / max(len(hist), 1) * 1e6
-    return eng, hist, us
+    return exp, hist, us
 
 
 def _loss_timeline(hist):
@@ -104,28 +89,22 @@ def sim_pareto(rounds: int = 25, C: int = 8, smoke: bool = False, emit=print):
         codecs, severities, engines = ("identity",), (SEVERITIES[1],), ENGINES
     else:
         codecs, severities, engines = CODECS, SEVERITIES, ENGINES
-    x, y = make_classification_data(
-        dim=DIM, num_classes=CLASSES, rank=6, num_points=10_240, noise=0.3, seed=0
-    )
-    x, y = x[:-2048], y[:-2048]
 
     results = {}
     for codec in codecs:
         for sev_name, profile in severities:
             # the sync engine's final loss is the cell's target
-            sync_eng, sync_hist, sync_us = _run_one(
-                "sync", codec, profile, rounds, C, x, y
+            sync_exp, sync_hist, sync_us = _run_one(
+                "sync", codec, profile, rounds, C
             )
             target = sync_hist[-1].loss_before
             for engine in engines:
                 if engine == "sync":
-                    eng, hist, us = sync_eng, sync_hist, sync_us
+                    exp, hist, us = sync_exp, sync_hist, sync_us
                 else:
-                    eng, hist, us = _run_one(
-                        engine, codec, profile, rounds, C, x, y
-                    )
+                    exp, hist, us = _run_one(engine, codec, profile, rounds, C)
                 t_target = _time_to(hist, target)
-                mb = eng.comm_total_bytes() / 1e6
+                mb = exp.comm_total_bytes() / 1e6
                 results[(engine, codec, sev_name)] = (t_target, hist)
                 emit(
                     f"sim_{engine}_{codec}_{sev_name},{us:.1f},"

@@ -11,78 +11,39 @@ to the ``identity`` baseline:
 - mean per-round wall-clock (codec encode/decode rides inside the jitted
   round, so this shows the compression compute cost, not just bytes).
 
-Emitted as ``wire_<codec>,us_per_round,derived`` CSV rows like every other
-benchmark in this harness.
+The sweep is one :func:`dataclasses.replace` of ``wire.codec`` on the
+shared CV base spec (:data:`benchmarks.bench_cv.BASE`); engines come
+exclusively from :func:`repro.api.build`.
 """
 from __future__ import annotations
 
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import FedConfig, init_factor
-from repro.data import FederatedBatcher, make_classification_data, partition_dirichlet
-from repro.fed import FederatedEngine
-
-DIM, CLASSES, HID = 64, 10, 256
+from benchmarks.bench_cv import BASE
+from repro.api import WireSpec, build
 
 CODECS = ("identity", "downcast", "downcast:float16", "int8_affine", "topk_rank")
 
 
-def _init(key):
-    k1, k2 = jax.random.split(key)
-    return {
-        "w1": init_factor(k1, DIM, HID, r_max=24, init_rank=24),
-        "b1": jnp.zeros((HID,)),
-        "w2": 0.06 * jax.random.normal(k2, (HID, CLASSES)),
-        "b2": jnp.zeros((CLASSES,)),
-    }
-
-
-def _fwd(p, x):
-    h = ((x @ p["w1"].U) @ p["w1"].S) @ p["w1"].V.T
-    h = jax.nn.relu(h + p["b1"])
-    return h @ p["w2"] + p["b2"]
-
-
-def _loss(p, batch):
-    logp = jax.nn.log_softmax(_fwd(p, batch["x"]))
-    return -jnp.mean(jnp.take_along_axis(logp, batch["y"][:, None], -1))
-
-
-def _run_one(codec: str, rounds: int, C: int, x, y, xt, yt):
-    parts = partition_dirichlet(y, C, alpha=0.3, seed=0)
-    batcher = FederatedBatcher({"x": x, "y": y}, parts, batch_size=64, seed=0)
-    cfg = FedConfig(
-        num_clients=C, s_star=max(240 // C, 1), lr=5e-2, tau=0.03,
-        correction="simplified", eval_after=False,
-    )
-    eng = FederatedEngine(
-        _loss, _init(jax.random.PRNGKey(0)), cfg,
-        method="fedlrt", wire_codec=codec,
-    )
+def _run_one(codec: str, rounds: int):
+    spec = BASE.replace(rounds=rounds, wire=WireSpec(codec=codec))
+    exp = build(spec)
     t0 = time.perf_counter()
-    hist = eng.train(batcher, rounds, log_every=0)
+    hist = exp.run()
     us = (time.perf_counter() - t0) / rounds * 1e6
-    acc = float(jnp.mean(jnp.argmax(_fwd(eng.params, xt), -1) == yt))
+    acc = exp.evaluate()
     up = sum(r.wire_bytes_up_per_client * r.cohort_size for r in hist)
     down = sum(r.wire_bytes_down_per_client * r.cohort_size for r in hist)
     return acc, up, down, us
 
 
-def wire_codecs(rounds: int = 25, C: int = 4, emit=print):
-    x, y = make_classification_data(
-        dim=DIM, num_classes=CLASSES, rank=6, num_points=10_240, noise=0.3, seed=0
-    )
-    xt, yt = jnp.asarray(x[-2048:]), jnp.asarray(y[-2048:])
-    x, y = x[:-2048], y[:-2048]
-
+def wire_codecs(rounds: int = 25, emit=print):
     results = {}
     base_acc = base_up = None
     for codec in CODECS:
-        acc, up, down, us = _run_one(codec, rounds, C, x, y, xt, yt)
+        acc, up, down, us = _run_one(codec, rounds)
         if base_acc is None:
             base_acc, base_up = acc, up
         results[codec] = (acc, up, down, us)

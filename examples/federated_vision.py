@@ -7,121 +7,101 @@ planted low-rank decision map, split non-iid (Dirichlet α=0.3) across
 clients.  Compares FeDLRT {none, simplified} against FedAvg/FedLin for
 growing client counts with s* = 240/C local steps, like the paper.
 
-All methods run through the :class:`FederatedEngine`, so per-round client
-participation is a flag away: ``--participation uniform:2`` samples a
-2-client cohort per round (comm totals then scale with the active cohort,
-not the population).
-
-Comm totals are *measured* through the engine's wire layer
-(:mod:`repro.fed.wire`); ``--wire-codec int8_affine`` quantizes every
-payload on the wire and the comm column shrinks accordingly.
+The whole scenario is one declarative :class:`repro.api.ExperimentSpec`;
+the method × client-count sweep is ``dataclasses.replace`` on a base
+spec, and every engine is constructed through :func:`repro.api.build` —
+so per-round participation, wire compression and the simulation engines
+are each one spec field away:
 
 Run:  PYTHONPATH=src python examples/federated_vision.py [--clients 2 4 8]
       PYTHONPATH=src python examples/federated_vision.py \
           --clients 8 --participation uniform:4
       PYTHONPATH=src python examples/federated_vision.py \
           --clients 4 --wire-codec int8_affine
+      PYTHONPATH=src python examples/federated_vision.py \
+          --clients 8 --engine async --sim-profile straggler:0.25,10
 """
 import argparse
+import dataclasses
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import FedConfig, init_factor
-from repro.core.factorization import is_factor, lr_matmul
-from repro.data import (
-    FederatedBatcher,
-    make_classification_data,
-    partition_dirichlet,
-    partition_sizes,
+from repro.api import (
+    DataSpec,
+    EngineSpec,
+    ExperimentSpec,
+    FedSpec,
+    ModelSpec,
+    ParticipationSpec,
+    SimSpec,
+    WireSpec,
+    build,
 )
-from repro.fed import FederatedEngine, Participation
 
-DIM, CLASSES, HID = 64, 10, 256
-
-
-def init_params(key, lowrank=True):
-    k1, k2, k3 = jax.random.split(key, 3)
-    w1 = (
-        init_factor(k1, DIM, HID, r_max=24, init_rank=24)
-        if lowrank
-        else 0.18 * jax.random.normal(k1, (DIM, HID))
-    )
-    return {
-        "w1": w1,
-        "b1": jnp.zeros((HID,)),
-        "w2": 0.06 * jax.random.normal(k3, (HID, CLASSES)),
-        "b2": jnp.zeros((CLASSES,)),
-    }
+#: the four method columns of the fig-5 table → (round method, correction)
+METHODS = {
+    "fedavg": ("fedavg", "none"),
+    "fedlin": ("fedlin", "none"),
+    "fedlrt:none": ("fedlrt", "none"),
+    "fedlrt:simplified": ("fedlrt", "simplified"),
+}
 
 
-def _hidden(p, x, kernels="off"):
-    """First (possibly factorized) layer: x @ w1 through the rank
-    bottleneck — lr_matmul dispatches to the fused Pallas chain under a
-    kernel policy, for LowRankFactor and the client loop's
-    AugmentedFactor alike."""
-    if is_factor(p["w1"]):
-        return lr_matmul(x, p["w1"], kernels=kernels)
-    return x @ p["w1"]
-
-
-def make_loss_fn(kernels="off"):
-    def loss_fn(p, batch):
-        h = jax.nn.relu(_hidden(p, batch["x"], kernels) + p["b1"])
-        logits = h @ p["w2"] + p["b2"]
-        logp = jax.nn.log_softmax(logits)
-        return -jnp.mean(jnp.take_along_axis(logp, batch["y"][:, None], -1))
-
-    return loss_fn
-
-
-def accuracy(p, x, y, kernels="off"):
-    h = jax.nn.relu(_hidden(p, x, kernels) + p["b1"])
-    pred = jnp.argmax(h @ p["w2"] + p["b2"], -1)
-    return float(jnp.mean(pred == y))
-
-
-def run(method, C, rounds, x, y, xt, yt, seed=0, participation=None,
-        weighted=False, kernels="off", wire_codec="identity",
-        engine="sync", sim_profile=None):
-    parts = partition_dirichlet(y, C, alpha=0.3, seed=seed)
-    s_star = max(240 // C, 1)
-    batcher = FederatedBatcher(
-        {"x": x, "y": y}, parts, batch_size=64, seed=seed
-    )
-    cfg = FedConfig(
-        num_clients=C, s_star=s_star, lr=5e-2, tau=0.03, eval_after=False,
-        correction=method.split(":")[1] if ":" in method else "none",
-    )
-    lowrank = method.startswith("fedlrt")
-    params = init_params(jax.random.PRNGKey(seed), lowrank=lowrank)
-    client_weights = partition_sizes(parts) if weighted else None
-    if engine != "sync" or sim_profile is not None:
-        from repro.fed.sim import make_sim_engine
-
-        kw = dict(
-            sim_profile=sim_profile, seed=seed, wire_codec=wire_codec,
-            method="fedlrt" if lowrank else method,
-            client_weights=client_weights,
-            # engines that can't honor the participation policy refuse
-            # loudly rather than silently training full-participation
-            participation=participation,
+def base_spec(args) -> ExperimentSpec:
+    # the base spec carries the *largest* population of the sweep; run()
+    # re-caps per C, so e.g. `--clients 2 4 8 --participation uniform:6`
+    # validates here and caps to min(6, C) for the smaller columns
+    C_max = max(args.clients)
+    participation = ParticipationSpec.from_string(args.participation)
+    if participation.cohort_size is not None:
+        participation = dataclasses.replace(
+            participation,
+            cohort_size=min(participation.cohort_size, C_max),
         )
-        eng = make_sim_engine(engine, make_loss_fn(kernels), params, cfg, **kw)
-    else:
-        eng = FederatedEngine(
-            make_loss_fn(kernels), params, cfg,
-            method="fedlrt" if lowrank else method,
-            participation=participation,
-            client_weights=client_weights,
-            wire_codec=wire_codec,
-        )
-    hist = eng.train(batcher, rounds, log_every=0)
-    acc = accuracy(eng.params, xt, yt, kernels)
-    rank = int(eng.params["w1"].rank) if lowrank else "-"
+    return ExperimentSpec(
+        name="federated-vision",
+        rounds=args.rounds,
+        log_every=0,
+        model=ModelSpec(
+            kind="mlp", dim=64, classes=10, hidden=256, r_max=24,
+            kernels=args.kernels,
+        ),
+        data=DataSpec(
+            kind="classification", batch=64, num_points=12_288, noise=0.3,
+            planted_rank=6, partition="dirichlet:0.3", holdout=2048,
+        ),
+        fed=FedSpec(
+            method="fedlrt", correction="simplified", clients=C_max,
+            local_steps=0,  # 0 → the paper's s* = 240/C scaling
+            lr=5e-2, tau=0.03, eval_after=False, weighted=args.weighted,
+        ),
+        participation=participation,
+        engine=EngineSpec(kind=args.engine),
+        wire=WireSpec(codec=args.wire_codec),
+        sim=SimSpec(profile=args.sim_profile),
+    )
+
+
+def run(spec: ExperimentSpec, method: str, C: int):
+    kind, correction = METHODS[method]
+    part = spec.participation
+    if part.cohort_size is not None and part.cohort_size > C:
+        # sweeping C below the requested cohort: cap at the population (the
+        # legacy min(k, C) behaviour; the spec itself rejects k > C)
+        part = dataclasses.replace(part, cohort_size=C)
+    spec = spec.replace(
+        fed=dataclasses.replace(
+            spec.fed, method=kind, correction=correction, clients=C
+        ),
+        participation=part,
+    )
+    exp = build(spec)
+    hist = exp.run()
+    acc = exp.evaluate()
+    lowrank = kind.startswith("fedlrt")
+    rank = int(exp.params["w1"].rank) if lowrank else "-"
     mean_cohort = float(np.mean([r.cohort_size for r in hist]))
-    return acc, eng.comm_total_bytes(), rank, mean_cohort, hist[-1].t_virtual
+    return acc, exp.comm_total_bytes(), rank, mean_cohort, hist[-1].t_virtual
 
 
 def main():
@@ -151,28 +131,17 @@ def main():
                     "straggler[:FRAC[,SLOWDOWN]] | lognormal[:SIGMA]")
     args = ap.parse_args()
 
-    x, y = make_classification_data(
-        dim=DIM, num_classes=CLASSES, rank=6, num_points=12_288, noise=0.3
-    )
-    xt, yt = jnp.asarray(x[-2048:]), jnp.asarray(y[-2048:])
-    x, y = x[:-2048], y[:-2048]
-
-    participation = Participation.from_spec(args.participation)
+    base = base_spec(args)
     print(
         f"participation={args.participation} wire_codec={args.wire_codec} "
         f"engine={args.engine}"
         + (f" sim_profile={args.sim_profile}" if args.sim_profile else "")
     )
     print(f"{'method':>18} | " + " | ".join(f"C={c}" for c in args.clients))
-    for method in ("fedavg", "fedlin", "fedlrt:none", "fedlrt:simplified"):
+    for method in METHODS:
         cells = []
         for C in args.clients:
-            acc, comm, rank, mean_cohort, t_virtual = run(
-                method, C, args.rounds, x, y, xt, yt,
-                participation=participation, weighted=args.weighted,
-                kernels=args.kernels, wire_codec=args.wire_codec,
-                engine=args.engine, sim_profile=args.sim_profile,
-            )
+            acc, comm, rank, mean_cohort, t_virtual = run(base, method, C)
             cells.append(
                 f"acc={acc:.3f} comm={comm/1e6:5.1f}MB "
                 f"rank={rank} cohort={mean_cohort:.1f}"

@@ -1,0 +1,38 @@
+"""Declarative experiment API: one typed, serializable spec per scenario.
+
+    from repro.api import ExperimentSpec, build, load_spec
+
+    spec = load_spec("examples/configs/async_straggler.toml")
+    exp = build(spec)          # engines resolved through the registries
+    print(exp.describe())
+    hist = exp.run()
+
+Or from the shell::
+
+    python -m repro.api run examples/configs/async_straggler.toml \
+        --set engine.buffer_size=4
+"""
+from repro.api.experiment import Experiment, build  # noqa: F401
+from repro.api.serialization import (  # noqa: F401
+    content_hash,
+    toml_dumps,
+    toml_loads,
+)
+from repro.api.spec import (  # noqa: F401
+    CheckpointSpec,
+    DataSpec,
+    EngineSpec,
+    ExperimentSpec,
+    FedSpec,
+    ModelSpec,
+    ParticipationSpec,
+    SimSpec,
+    WireSpec,
+    load_spec,
+)
+from repro.api.tasks import (  # noqa: F401
+    PRESETS,
+    Task,
+    build_task,
+    register_task,
+)

@@ -1,0 +1,217 @@
+"""``build(spec) → Experiment``: the one place engines are constructed.
+
+Every axis of the :class:`repro.api.spec.ExperimentSpec` is resolved
+through the existing registries — ``repro.api.tasks`` for the model/data
+task, :data:`repro.fed.engine.ROUND_METHODS` for the round method,
+:meth:`repro.fed.Participation` for the cohort policy,
+:func:`repro.fed.sim.make_sim_engine` for the aggregation engine,
+:func:`repro.fed.wire.make_codec` for the codecs — and the resulting
+:class:`Experiment` facade owns the run loop, resume and description.
+The three entry-point surfaces (the train CLI, the vision example, the
+benchmark drivers) all construct engines exclusively through here; the
+engine-construction logic they used to copy-paste lives only in
+:func:`build`.
+"""
+import dataclasses
+import glob
+import os
+from typing import List, Optional
+
+from repro.api.spec import ExperimentSpec
+from repro.api.tasks import Task, build_task
+
+
+def build(spec: ExperimentSpec) -> "Experiment":
+    """Resolve a validated spec into a runnable :class:`Experiment`."""
+    task = build_task(spec)
+    fc = spec.fed.to_fed_config()
+    participation = spec.participation.build(seed=spec.seed)
+    client_weights = task.client_sizes if spec.fed.weighted else None
+    ckpt_meta = {"spec_hash": spec.spec_hash()}
+    if spec.name:
+        ckpt_meta["spec_name"] = spec.name
+
+    if spec.engine.kind != "sync" or spec.sim.profile is not None:
+        from repro.fed.sim import make_sim_engine
+
+        # participation and checkpointing always pass through: engines
+        # that can't honor them refuse loudly instead of dropping them
+        kw = dict(
+            sim_profile=spec.sim.profile,
+            seed=spec.seed,
+            method=spec.fed.method,
+            wire_codec=spec.wire.codec,
+            client_weights=client_weights,
+            participation=participation,
+            checkpoint_dir=spec.checkpoint.dir,
+            checkpoint_every=spec.checkpoint.effective_every,
+            checkpoint_meta=ckpt_meta,
+        )
+        # None = unset: the factory's own defaults apply (one source of
+        # truth for them — make_sim_engine), never re-hardcoded here
+        if spec.engine.kind == "async":
+            kw["buffer_size"] = spec.engine.buffer_size
+            if spec.engine.staleness_power is not None:
+                kw["staleness_power"] = spec.engine.staleness_power
+        elif spec.engine.kind == "hier":
+            kw["edge_wire_codec"] = spec.wire.edge_codec
+            if spec.engine.edges is not None:
+                kw["num_edges"] = spec.engine.edges
+            if spec.engine.edge_rounds is not None:
+                kw["edge_rounds"] = spec.engine.edge_rounds
+        engine = make_sim_engine(
+            spec.engine.kind, task.loss_fn, task.params, fc, **kw
+        )
+    else:
+        from repro.fed.engine import FederatedEngine
+
+        engine = FederatedEngine(
+            task.loss_fn, task.params, fc,
+            method=spec.fed.method,
+            participation=participation,
+            client_weights=client_weights,
+            checkpoint_dir=spec.checkpoint.dir,
+            checkpoint_every=spec.checkpoint.effective_every,
+            wire_codec=spec.wire.codec,
+            checkpoint_meta=ckpt_meta,
+        )
+    return Experiment(spec=spec, task=task, engine=engine)
+
+
+@dataclasses.dataclass
+class Experiment:
+    """A built experiment: spec + task + engine, ready to run.
+
+    ``run()`` trains ``spec.rounds`` rounds (overridable) and returns the
+    engine's round history; ``resume()`` restores the latest (or a named)
+    checkpoint after verifying the stamped spec hash; ``describe()``
+    renders the scenario for humans.
+    """
+
+    spec: ExperimentSpec
+    task: Task
+    engine: object
+
+    @property
+    def params(self):
+        return self.engine.params
+
+    @property
+    def history(self) -> List:
+        return self.engine.history
+
+    @property
+    def is_simulated(self) -> bool:
+        """True when rounds are priced on the virtual clock (any non-sync
+        engine, or a sync engine with a fleet profile)."""
+        return self.spec.engine.kind != "sync" or self.spec.sim.profile is not None
+
+    def run(self, rounds: Optional[int] = None, *, log_every: Optional[int] = None):
+        """Train ``rounds`` (default ``spec.rounds``) aggregation rounds."""
+        n = self.spec.rounds if rounds is None else rounds
+        le = self.spec.log_every if log_every is None else log_every
+        return self.engine.train(self.task.batcher, n, log_every=le)
+
+    def evaluate(self) -> float:
+        """The task's holdout metric (accuracy) on the current params."""
+        if self.task.eval_fn is None:
+            raise ValueError(
+                f"the {self.spec.model.kind!r} task defines no holdout eval"
+            )
+        return self.task.eval_fn(self.engine.params)
+
+    def resume(self, path: Optional[str] = None) -> dict:
+        """Restore a checkpoint written by this spec's engine.
+
+        ``path`` defaults to the latest ``round_*.npz`` under
+        ``spec.checkpoint.dir``.  A checkpoint stamped with a *different*
+        spec hash is refused loudly — resuming under changed hyperparameters
+        silently corrupts a run; re-derive the spec or move the checkpoint.
+        """
+        if not hasattr(self.engine, "restore"):
+            raise ValueError(
+                f"the {self.spec.engine.kind} engine does not support resume"
+            )
+        if path is None:
+            if not self.spec.checkpoint.dir:
+                raise ValueError(
+                    "resume() needs checkpoint.dir in the spec or an "
+                    "explicit path"
+                )
+            ckpts = sorted(
+                glob.glob(os.path.join(self.spec.checkpoint.dir, "round_*.npz"))
+            )
+            if not ckpts:
+                raise FileNotFoundError(
+                    f"no round_*.npz checkpoints under "
+                    f"{self.spec.checkpoint.dir!r}"
+                )
+            path = ckpts[-1]
+        # guard BEFORE restore touches anything: a refused resume must
+        # leave params / round_idx / history / batcher state untouched
+        from repro.checkpoint import load_checkpoint_meta
+
+        stamped = load_checkpoint_meta(path).get("spec_hash")
+        ours = self.spec.spec_hash()
+        if stamped is not None and stamped != ours:
+            raise ValueError(
+                f"checkpoint {path!r} was written by spec {stamped}, but "
+                f"this experiment is spec {ours} — refusing to resume a "
+                f"mismatched spec (same seed ≠ same run under different "
+                f"hyperparameters)"
+            )
+        return self.engine.restore(path, batcher=self.task.batcher)
+
+    def comm_total_bytes(self) -> float:
+        return self.engine.comm_total_bytes()
+
+    def describe(self) -> str:
+        s = self.spec
+        part = s.participation.to_string()
+        eng = s.engine.kind
+        # unset (None) knobs stay with the engine factory's defaults; only
+        # report what the spec actually pins
+        if eng == "async":
+            knobs = [
+                f"buffer_size={s.engine.buffer_size}"
+                if s.engine.buffer_size is not None
+                else f"buffer_size={s.fed.clients} (cohort)",
+            ]
+            if s.engine.staleness_power is not None:
+                knobs.append(f"staleness_power={s.engine.staleness_power:g}")
+            eng += f" ({', '.join(knobs)})"
+        elif eng == "hier":
+            knobs = []
+            if s.engine.edges is not None:
+                knobs.append(f"edges={s.engine.edges}")
+            if s.engine.edge_rounds is not None:
+                knobs.append(f"edge_rounds={s.engine.edge_rounds}")
+            if knobs:
+                eng += f" ({', '.join(knobs)})"
+        wire = s.wire.codec
+        if s.wire.edge_codec is not None:
+            wire += f" (edge: {s.wire.edge_codec})"
+        ckpt = (
+            f"{s.checkpoint.dir} every {s.checkpoint.effective_every}"
+            if s.checkpoint.dir
+            else "(off)"
+        )
+        lines = [
+            f"experiment {s.name or '(unnamed)'}  [spec {s.spec_hash()}]",
+            f"  task           {s.model.kind}: {self.task.description}",
+            f"  fed            {s.fed.method}"
+            + (
+                f"/{s.fed.correction_effective}"
+                if s.fed.method.startswith("fedlrt") else ""
+            )
+            + f"  C={s.fed.clients}  s*={s.fed.s_star}  lr={s.fed.lr:g}"
+            + f"  tau={s.fed.tau:g}"
+            + ("  weighted" if s.fed.weighted else ""),
+            f"  participation  {part}",
+            f"  engine         {eng}",
+            f"  wire           {wire}",
+            f"  sim            {s.sim.profile or '(no virtual clock)'}",
+            f"  checkpoint     {ckpt}",
+            f"  rounds         {s.rounds}  (seed {s.seed})",
+        ]
+        return "\n".join(lines)

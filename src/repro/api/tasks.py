@@ -1,0 +1,242 @@
+"""Task registry: (ModelSpec, DataSpec) → loss, params, batcher, eval.
+
+A *task* is everything below the federated layer: the model/loss pair,
+its initial parameters, the per-client data pipeline and an optional
+holdout evaluation.  ``build(spec)`` resolves ``spec.model.kind`` through
+this registry, so new workloads plug in with :func:`register_task` —
+never by editing the builder.
+
+Built-ins:
+
+- ``lm`` — a decoder LM from a named preset (moved here from
+  ``repro.launch.train``; the train CLI re-exports ``PRESETS``) or the
+  architecture registry, trained on the planted-low-rank Markov token
+  stream, windows partitioned iid across clients.
+- ``mlp`` — the fig-5-style CV proxy: a 2-layer MLP head whose hidden
+  layer is FeDLRT-factorized (when the method is low-rank), on synthetic
+  classification data with a planted low-rank decision map, Dirichlet or
+  iid split, with a held-out accuracy eval.
+"""
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.models.config import LowRankPolicy, ModelConfig
+
+#: named LM presets (the train CLI's ``--preset`` menu)
+PRESETS = {
+    # ~100M-param dense decoder for the end-to-end example (deliverable b)
+    "llm-100m": ModelConfig(
+        name="llm-100m", family="dense", num_layers=12, d_model=640,
+        num_heads=10, num_kv_heads=10, head_dim=64, d_ff=2560,
+        vocab_size=8192, compute_dtype="float32", param_dtype="float32",
+        lowrank=LowRankPolicy(rank_frac=0.25, r_cap=160, min_dim=256),
+        attn_q_chunk=256,
+    ),
+    # CPU-feasible demo (~2M params)
+    "llm-tiny": ModelConfig(
+        name="llm-tiny", family="dense", num_layers=4, d_model=128,
+        num_heads=4, num_kv_heads=4, head_dim=32, d_ff=512,
+        vocab_size=512, compute_dtype="float32", param_dtype="float32",
+        lowrank=LowRankPolicy(rank_frac=0.25, r_cap=32, min_dim=32),
+        attn_q_chunk=64,
+    ),
+}
+
+
+@dataclasses.dataclass
+class Task:
+    """A built task: what the engine trains and how it is judged."""
+
+    loss_fn: Callable
+    params: object
+    batcher: object  # FederatedBatcher
+    client_sizes: np.ndarray  # |X_c| per client (weighted aggregation)
+    description: str
+    eval_fn: Optional[Callable] = None  # params → float (holdout accuracy)
+
+
+#: kind → (builder(spec) → Task, compatible data kinds)
+_TASKS: Dict[str, Tuple[Callable, Tuple[str, ...]]] = {}
+
+
+def register_task(
+    kind: str, builder: Callable, *, data_kinds: Tuple[str, ...],
+    overwrite: bool = False,
+):
+    """Register a task family under ``model.kind == kind``.
+
+    ``builder(spec: ExperimentSpec) → Task``; ``data_kinds`` lists the
+    ``data.kind`` values the builder understands (spec validation rejects
+    mismatches before the builder ever runs).
+    """
+    if not overwrite and kind in _TASKS:
+        raise ValueError(
+            f"task kind {kind!r} is already registered "
+            f"(pass overwrite=True to replace it)"
+        )
+    _TASKS[kind] = (builder, tuple(data_kinds))
+
+
+def task_data_kinds(kind: str) -> Tuple[str, ...]:
+    """The data kinds compatible with task ``kind`` (raises for unknown)."""
+    if kind not in _TASKS:
+        raise ValueError(
+            f"unknown model.kind {kind!r}; registered tasks: {sorted(_TASKS)}"
+        )
+    return _TASKS[kind][1]
+
+
+def build_task(spec) -> Task:
+    return _TASKS[spec.model.kind][0](spec)
+
+
+def _partition(partition: str, labels, n: int, clients: int, seed: int):
+    from repro.data import partition_dirichlet, partition_iid
+
+    kind, _, arg = partition.partition(":")
+    if kind == "iid":
+        return partition_iid(n, clients, seed=seed)
+    return partition_dirichlet(labels, clients, alpha=float(arg), seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# lm: decoder LM on the Markov token stream (the train CLI's task)
+# ---------------------------------------------------------------------------
+
+
+def _build_lm(spec) -> Task:
+    import jax
+
+    from repro.configs import get_config
+    from repro.data import FederatedBatcher, make_token_stream, partition_sizes
+    from repro.models import build_model
+    from repro.models.config import reduced
+
+    m, d = spec.model, spec.data
+    cfg = PRESETS[m.preset] if m.preset is not None else get_config(m.arch)
+    if m.smoke:
+        cfg = reduced(cfg)
+    if m.kernels != cfg.kernels:
+        cfg = dataclasses.replace(cfg, kernels=m.kernels)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(spec.seed))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+
+    # data: Markov stream with planted low-rank transitions → real loss floor
+    tokens = make_token_stream(
+        vocab_size=cfg.vocab_size,
+        num_tokens=spec.fed.clients * d.tokens_per_client,
+        rank=d.stream_rank,
+        seed=spec.seed,
+    )
+    T = d.seq
+    windows = np.lib.stride_tricks.sliding_window_view(tokens, T + 1)[:: T // 2]
+    parts = _partition(d.partition, None, len(windows), spec.fed.clients, spec.seed)
+    batcher = FederatedBatcher(
+        {"tokens": windows}, parts, batch_size=d.batch, seed=spec.seed
+    )
+    return Task(
+        loss_fn=model.loss_fn,
+        params=params,
+        batcher=batcher,
+        client_sizes=np.asarray(partition_sizes(parts)),
+        description=f"model={cfg.name} params={n_params/1e6:.1f}M",
+    )
+
+
+# ---------------------------------------------------------------------------
+# mlp: the fig-5-style CV proxy head (vision example / CV benchmarks)
+# ---------------------------------------------------------------------------
+
+
+def _mlp_init(key, m, lowrank: bool):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import init_factor
+
+    k1, k2 = jax.random.split(key)
+    w1 = (
+        init_factor(k1, m.dim, m.hidden, r_max=m.r_max, init_rank=m.r_max)
+        if lowrank
+        else 0.18 * jax.random.normal(k1, (m.dim, m.hidden))
+    )
+    return {
+        "w1": w1,
+        "b1": jnp.zeros((m.hidden,)),
+        "w2": 0.06 * jax.random.normal(k2, (m.hidden, m.classes)),
+        "b2": jnp.zeros((m.classes,)),
+    }
+
+
+def _mlp_fwd(p, x, kernels: str):
+    """First (possibly factorized) layer through the rank bottleneck —
+    ``lr_matmul`` dispatches to the fused Pallas chain under a kernel
+    policy, for LowRankFactor and the client loop's AugmentedFactor
+    alike."""
+    import jax
+
+    from repro.core.factorization import is_factor, lr_matmul
+
+    h = (
+        lr_matmul(x, p["w1"], kernels=kernels)
+        if is_factor(p["w1"])
+        else x @ p["w1"]
+    )
+    h = jax.nn.relu(h + p["b1"])
+    return h @ p["w2"] + p["b2"]
+
+
+def _build_mlp(spec) -> Task:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.data import (
+        FederatedBatcher,
+        make_classification_data,
+        partition_sizes,
+    )
+
+    m, d = spec.model, spec.data
+    x, y = make_classification_data(
+        dim=m.dim, num_classes=m.classes, rank=d.planted_rank,
+        num_points=d.num_points, noise=d.noise, seed=spec.seed,
+    )
+    if d.holdout:
+        xt, yt = jnp.asarray(x[-d.holdout:]), jnp.asarray(y[-d.holdout:])
+        x, y = x[:-d.holdout], y[:-d.holdout]
+    else:
+        xt = yt = None
+    parts = _partition(d.partition, y, len(y), spec.fed.clients, spec.seed)
+    batcher = FederatedBatcher({"x": x, "y": y}, parts, batch_size=d.batch, seed=spec.seed)
+
+    kernels = m.kernels
+    lowrank = m.lowrank and spec.fed.method.startswith("fedlrt")
+
+    def loss_fn(p, batch):
+        logp = jax.nn.log_softmax(_mlp_fwd(p, batch["x"], kernels))
+        return -jnp.mean(jnp.take_along_axis(logp, batch["y"][:, None], -1))
+
+    eval_fn = None
+    if xt is not None:
+        def eval_fn(p):
+            pred = jnp.argmax(_mlp_fwd(p, xt, kernels), -1)
+            return float(jnp.mean(pred == yt))
+
+    return Task(
+        loss_fn=loss_fn,
+        params=_mlp_init(jax.random.PRNGKey(spec.seed), m, lowrank),
+        batcher=batcher,
+        client_sizes=np.asarray(partition_sizes(parts)),
+        description=(
+            f"mlp head {m.dim}→{m.hidden}→{m.classes} "
+            f"({'rank≤' + str(m.r_max) if lowrank else 'dense'})"
+        ),
+        eval_fn=eval_fn,
+    )
+
+
+register_task("lm", _build_lm, data_kinds=("token_stream",))
+register_task("mlp", _build_mlp, data_kinds=("classification",))

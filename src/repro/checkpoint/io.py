@@ -50,6 +50,16 @@ def save_checkpoint(path: str, params, *, meta: Optional[dict] = None):
     os.replace(tmp, path)
 
 
+def load_checkpoint_meta(path: str) -> dict:
+    """The checkpoint's ``__meta__`` dict alone — npz members are lazy, so
+    this never materializes the parameter arrays (cheap pre-restore guard
+    checks, e.g. the experiment API's spec-hash match)."""
+    with np.load(path) as z:
+        if "__meta__" not in z.files:
+            return {}
+        return json.loads(bytes(z["__meta__"]).decode())
+
+
 def load_checkpoint(path: str):
     """Returns (params, meta)."""
     with np.load(path) as z:

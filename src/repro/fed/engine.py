@@ -181,6 +181,7 @@ class FederatedEngine:
         donate: bool = True,
         client_weights=None,
         wire_codec="identity",
+        checkpoint_meta: Optional[dict] = None,
     ):
         if method not in ROUND_METHODS:
             raise ValueError(f"method must be one of {list(ROUND_METHODS)}")
@@ -193,6 +194,9 @@ class FederatedEngine:
         self.eval_fn = eval_fn
         self.checkpoint_dir = checkpoint_dir
         self.checkpoint_every = checkpoint_every
+        # extra metadata stamped into every checkpoint (e.g. the experiment
+        # API's spec hash, so resume() can refuse a mismatched spec)
+        self.checkpoint_meta = dict(checkpoint_meta) if checkpoint_meta else {}
         self.history: List[RoundResult] = []
         self.round_idx = 0
         self.client_weights = (
@@ -334,7 +338,11 @@ class FederatedEngine:
         save_checkpoint(
             path,
             self.params,
-            meta={"round": self.round_idx, "method": self.method},
+            meta={
+                "round": self.round_idx,
+                "method": self.method,
+                **self.checkpoint_meta,
+            },
         )
         # sidecar: data-stream state (so a restored run replays the
         # remaining rounds bit-identically — same per-client shuffle

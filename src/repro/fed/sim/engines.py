@@ -955,6 +955,7 @@ def make_sim_engine(
             raise ValueError(
                 "the hier engine does not support checkpointing yet"
             )
+        kw.pop("checkpoint_meta", None)  # nothing to stamp without checkpoints
         return HierarchicalEngine(
             loss_fn, params, cfg, fleet=fleet, num_edges=num_edges,
             edge_rounds=edge_rounds, edge_wire_codec=edge_wire_codec, **kw,

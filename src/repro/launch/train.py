@@ -1,13 +1,19 @@
-"""Federated LM training driver (example application entry point).
+"""Federated LM training driver — a thin CLI over :mod:`repro.api`.
 
-Builds an arch from the registry (or a named preset), a Markov-chain token
-stream partitioned across clients, and runs FeDLRT (or a baseline) rounds
-through the FederatedEngine with checkpointing.
+The scenario lives in a declarative :class:`repro.api.ExperimentSpec`:
+load one from a file, tweak it with dotted overrides, or drive it with the
+legacy flags (every historical flag keeps working as an alias onto a spec
+field).  Engine construction happens exclusively in
+:func:`repro.api.build`.
 
     PYTHONPATH=src python -m repro.launch.train --preset llm-100m --rounds 300
-    PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --smoke
-    PYTHONPATH=src python -m repro.launch.train --preset llm-tiny \
-        --method fedavg --rounds 50
+    PYTHONPATH=src python -m repro.launch.train --preset none --arch qwen2-7b --smoke
+    PYTHONPATH=src python -m repro.launch.train --config examples/configs/sync_baseline.toml \
+        --set engine.kind=async --set sim.profile=straggler:0.25,10
+
+``--preset`` and ``--arch`` are mutually exclusive (``--preset none``
+selects the registry path); precedence is config file < legacy flags <
+``--set`` overrides.
 
 On the production mesh this module is launched once per host; the client
 axis maps onto ("pod","data") exactly as in the dry-run (launch/dryrun.py
@@ -18,184 +24,187 @@ from __future__ import annotations
 import argparse
 import dataclasses
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.api import ExperimentSpec, ParticipationSpec, build, load_spec
+from repro.api.serialization import parse_override, set_dotted
+from repro.api.tasks import PRESETS  # noqa: F401  (re-export: serve.py, tests)
 
-from repro.configs import get_config
-from repro.core import FedConfig
-from repro.data import FederatedBatcher, make_token_stream, partition_iid, partition_sizes
-from repro.fed import FederatedEngine, Participation
-from repro.models import build_model
-from repro.models.config import LowRankPolicy, ModelConfig, reduced
-
-PRESETS = {
-    # ~100M-param dense decoder for the end-to-end example (deliverable b)
-    "llm-100m": ModelConfig(
-        name="llm-100m", family="dense", num_layers=12, d_model=640,
-        num_heads=10, num_kv_heads=10, head_dim=64, d_ff=2560,
-        vocab_size=8192, compute_dtype="float32", param_dtype="float32",
-        lowrank=LowRankPolicy(rank_frac=0.25, r_cap=160, min_dim=256),
-        attn_q_chunk=256,
-    ),
-    # CPU-feasible demo (~2M params)
-    "llm-tiny": ModelConfig(
-        name="llm-tiny", family="dense", num_layers=4, d_model=128,
-        num_heads=4, num_kv_heads=4, head_dim=32, d_ff=512,
-        vocab_size=512, compute_dtype="float32", param_dtype="float32",
-        lowrank=LowRankPolicy(rank_frac=0.25, r_cap=32, min_dim=32),
-        attn_q_chunk=64,
-    ),
+#: legacy flag → spec field the alias writes (participation/preset/arch are
+#: handled specially below)
+FLAG_TO_FIELD = {
+    "smoke": "model.smoke",
+    "kernels": "model.kernels",
+    "method": "fed.method",
+    "correction": "fed.correction",
+    "clients": "fed.clients",
+    "local_steps": "fed.local_steps",
+    "lr": "fed.lr",
+    "tau": "fed.tau",
+    "weighted": "fed.weighted",
+    "wire_codec": "wire.codec",
+    "edge_wire_codec": "wire.edge_codec",
+    "engine": "engine.kind",
+    "async_buffer": "engine.buffer_size",
+    "staleness_power": "engine.staleness_power",
+    "edges": "engine.edges",
+    "edge_rounds": "engine.edge_rounds",
+    "sim_profile": "sim.profile",
+    "rounds": "rounds",
+    "batch": "data.batch",
+    "seq": "data.seq",
+    "seed": "seed",
+    "checkpoint_dir": "checkpoint.dir",
+    "checkpoint_every": "checkpoint.every",
+    "log_every": "log_every",
 }
 
 
-def build_cfg(args) -> ModelConfig:
-    if args.preset:
-        cfg = PRESETS[args.preset]
-    else:
-        cfg = get_config(args.arch)
-    if args.smoke:
-        cfg = reduced(cfg)
-    return cfg
+def _parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        description=__doc__.split("\n")[0],
+        argument_default=argparse.SUPPRESS,  # only provided flags override
+    )
+    ap.add_argument("--config", type=str, default=None,
+                    help="ExperimentSpec file (.toml or .json) to start from")
+    ap.add_argument("--set", dest="sets", action="append", default=[],
+                    metavar="SECTION.KEY=VALUE",
+                    help="dotted spec override, e.g. --set engine.kind=async "
+                    "(applied after config and legacy flags; repeatable)")
+    ap.add_argument("--arch", type=str,
+                    help="architecture registry id (mutually exclusive with "
+                    "--preset; implies --preset none)")
+    ap.add_argument("--preset", type=str,
+                    choices=sorted(PRESETS) + ["none"],
+                    help="named LM preset (default llm-tiny); 'none' selects "
+                    "the --arch registry path")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--method", type=str,
+                    choices=["fedlrt", "fedavg", "fedlin", "fedlrt_naive"])
+    ap.add_argument("--correction", type=str,
+                    choices=["none", "simplified", "full"])
+    ap.add_argument("--clients", type=int)
+    ap.add_argument("--participation", type=str,
+                    help="per-round cohort policy: full | uniform:K | "
+                    "round_robin:K | dropout:P")
+    ap.add_argument("--weighted", action="store_true",
+                    help="aggregate with client weights ∝ |X_c| (paper §2 "
+                    "extension)")
+    ap.add_argument("--kernels", choices=["auto", "interpret", "off"],
+                    help="low-rank Pallas kernel dispatch: auto = fused "
+                    "kernels on TPU (jnp reference elsewhere), interpret = "
+                    "force the Pallas interpreter (CPU validation, slow), "
+                    "off = plain jnp chain")
+    ap.add_argument("--wire-codec", type=str,
+                    help="on-the-wire codec for round payloads: identity | "
+                    "downcast[:dtype] | int8_affine | topk_rank (see "
+                    "repro.fed.wire); comm totals are measured through it")
+    ap.add_argument("--engine", choices=["sync", "async", "hier"],
+                    help="aggregation engine: sync (one barrier per round), "
+                    "async (FedBuff-style buffered, --async-buffer arrivals "
+                    "per aggregate), hier (two-tier edge→cloud; "
+                    "--edges/--edge-rounds)")
+    ap.add_argument("--sim-profile", type=str,
+                    help="client system-profile fleet for virtual-clock "
+                    "pricing: uniform | straggler[:FRAC[,SLOWDOWN]] | "
+                    "lognormal[:SIGMA] (optionally prefixed dropout:P,). "
+                    "Implied 'uniform' for the async/hier engines; omit "
+                    "entirely for the plain sync engine")
+    ap.add_argument("--async-buffer", type=int,
+                    help="async engine: aggregate every K arrivals "
+                    "(default: #clients)")
+    ap.add_argument("--staleness-power", type=float,
+                    help="async engine: staleness discount (1+s)^-p on "
+                    "stale updates")
+    ap.add_argument("--edges", type=int,
+                    help="hier engine: number of edge servers")
+    ap.add_argument("--edge-rounds", type=int,
+                    help="hier engine: local rounds per cloud round")
+    ap.add_argument("--edge-wire-codec", type=str,
+                    help="hier engine: codec for the edge→cloud hop "
+                    "(default: --wire-codec)")
+    ap.add_argument("--rounds", type=int)
+    ap.add_argument("--local-steps", type=int)
+    ap.add_argument("--batch", type=int)
+    ap.add_argument("--seq", type=int)
+    ap.add_argument("--lr", type=float)
+    ap.add_argument("--tau", type=float)
+    ap.add_argument("--seed", type=int)
+    ap.add_argument("--checkpoint-dir", type=str)
+    ap.add_argument("--checkpoint-every", type=int,
+                    help="checkpoint cadence in rounds (needs "
+                    "--checkpoint-dir; default 20)")
+    ap.add_argument("--log-every", type=int)
+    return ap
+
+
+def spec_from_argv(argv=None) -> ExperimentSpec:
+    """Resolve CLI arguments into a validated :class:`ExperimentSpec`.
+
+    Precedence: ``--config`` file < legacy flag aliases < ``--set``.
+    """
+    ap = _parser()
+    args = vars(ap.parse_args(argv))
+    sets = args.pop("sets")
+    config = args.pop("config")
+    spec = load_spec(config) if config else ExperimentSpec()
+
+    # model selection: --preset and --arch are mutually exclusive ("none"
+    # is the explicit opt-out; previously --arch silently clobbered the
+    # preset default and `choices=list(PRESETS) + [None]` was untypable)
+    preset = args.pop("preset", None)
+    arch = args.pop("arch", None)
+    if preset is not None and preset != "none" and arch is not None:
+        ap.error("--preset and --arch are mutually exclusive "
+                 "(pass --preset none to use --arch)")
+    assignments = {}
+    if arch is not None:
+        assignments.update({"model.preset": None, "model.arch": arch})
+    elif preset == "none":
+        assignments["model.preset"] = None
+    elif preset is not None:
+        assignments.update({"model.preset": preset, "model.arch": None})
+
+    if "participation" in args:
+        p = ParticipationSpec.from_string(args.pop("participation"))
+        for f in dataclasses.fields(p):
+            assignments[f"participation.{f.name}"] = getattr(p, f.name)
+
+    # the variance correction only parameterizes FeDLRT: dense methods get
+    # correction='none' implicitly (the legacy CLI's silent coercion), and
+    # an *explicit* contradictory --correction is a hard error at spec time
+    method = args.get("method")
+    if method is not None and not method.startswith("fedlrt"):
+        args.setdefault("correction", "none")
+    assignments.update({FLAG_TO_FIELD[k]: v for k, v in args.items()})
+
+    # one mutation pass over the plain dict, one validation at the end —
+    # flag/override combinations never trip on transient intermediate states
+    data = spec.to_dict()
+    for path, value in assignments.items():
+        set_dotted(ExperimentSpec, data, path, value, parse_str=False)
+    for item in sets:
+        path, raw = parse_override(item)
+        set_dotted(ExperimentSpec, data, path, raw, parse_str=True)
+    return ExperimentSpec.from_dict(data)
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", type=str, default=None)
-    ap.add_argument("--preset", type=str, default="llm-tiny", choices=list(PRESETS) + [None])
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--method", default="fedlrt", choices=["fedlrt", "fedavg", "fedlin"])
-    ap.add_argument("--correction", default="simplified")
-    ap.add_argument("--clients", type=int, default=4)
-    ap.add_argument(
-        "--participation", type=str, default="full",
-        help="per-round cohort policy: full | uniform:K | round_robin:K | dropout:P",
-    )
-    ap.add_argument(
-        "--weighted", action="store_true",
-        help="aggregate with client weights ∝ |X_c| (paper §2 extension)",
-    )
-    ap.add_argument(
-        "--kernels", default="auto", choices=["auto", "interpret", "off"],
-        help="low-rank Pallas kernel dispatch: auto = fused kernels on TPU "
-        "(jnp reference elsewhere), interpret = force the Pallas "
-        "interpreter (CPU validation, slow), off = plain jnp chain",
-    )
-    ap.add_argument(
-        "--wire-codec", default="identity",
-        help="on-the-wire codec for round payloads: identity | "
-        "downcast[:dtype] | int8_affine | topk_rank (see repro.fed.wire); "
-        "comm totals are measured through it",
-    )
-    ap.add_argument(
-        "--engine", default="sync", choices=["sync", "async", "hier"],
-        help="aggregation engine: sync (one barrier per round), async "
-        "(FedBuff-style buffered, --async-buffer arrivals per aggregate), "
-        "hier (two-tier edge→cloud; --edges/--edge-rounds)",
-    )
-    ap.add_argument(
-        "--sim-profile", type=str, default=None,
-        help="client system-profile fleet for virtual-clock pricing: "
-        "uniform | straggler[:FRAC[,SLOWDOWN]] | lognormal[:SIGMA] "
-        "(optionally prefixed dropout:P,).  Implied 'uniform' for the "
-        "async/hier engines; omit entirely for the plain sync engine",
-    )
-    ap.add_argument(
-        "--async-buffer", type=int, default=None,
-        help="async engine: aggregate every K arrivals (default: #clients)",
-    )
-    ap.add_argument(
-        "--staleness-power", type=float, default=0.5,
-        help="async engine: staleness discount (1+s)^-p on stale updates",
-    )
-    ap.add_argument("--edges", type=int, default=2,
-                    help="hier engine: number of edge servers")
-    ap.add_argument("--edge-rounds", type=int, default=1,
-                    help="hier engine: local rounds per cloud round")
-    ap.add_argument(
-        "--edge-wire-codec", type=str, default=None,
-        help="hier engine: codec for the edge→cloud hop (default: "
-        "--wire-codec)",
-    )
-    ap.add_argument("--rounds", type=int, default=40)
-    ap.add_argument("--local-steps", type=int, default=4)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--seq", type=int, default=128)
-    ap.add_argument("--lr", type=float, default=3e-2)
-    ap.add_argument("--tau", type=float, default=0.05)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--checkpoint-dir", type=str, default=None)
-    ap.add_argument("--log-every", type=int, default=5)
-    args = ap.parse_args(argv)
-    if args.arch:
-        args.preset = None
+    spec = spec_from_argv(argv)
+    exp = build(spec)
+    print(f"{exp.task.description} clients={spec.fed.clients} "
+          f"[spec {spec.spec_hash()}]")
+    hist = exp.run()
+    import numpy as np
 
-    cfg = build_cfg(args)
-    if args.kernels != cfg.kernels:
-        cfg = dataclasses.replace(cfg, kernels=args.kernels)
-    model = build_model(cfg)
-    params, _ = model.init(jax.random.PRNGKey(args.seed))
-    n_params = sum(x.size for x in jax.tree.leaves(params))
-    print(f"model={cfg.name} params={n_params/1e6:.1f}M clients={args.clients}")
-
-    # data: Markov stream with planted low-rank transitions → real loss floor
-    tokens = make_token_stream(
-        vocab_size=cfg.vocab_size, num_tokens=args.clients * 200_000 // 1,
-        rank=16, seed=args.seed,
-    )
-    T = args.seq
-    windows = np.lib.stride_tricks.sliding_window_view(tokens, T + 1)[:: T // 2]
-    parts = partition_iid(len(windows), args.clients, seed=args.seed)
-    batcher = FederatedBatcher(
-        {"tokens": windows}, parts, batch_size=args.batch, seed=args.seed
-    )
-
-    fc = FedConfig(
-        num_clients=args.clients, s_star=args.local_steps, lr=args.lr,
-        correction=args.correction if args.method == "fedlrt" else "none",
-        tau=args.tau,
-    )
-    participation = Participation.from_spec(args.participation, seed=args.seed)
-    client_weights = partition_sizes(parts) if args.weighted else None
-    if args.engine != "sync" or args.sim_profile is not None:
-        from repro.fed.sim import make_sim_engine
-
-        # participation and checkpointing always pass through: engines
-        # that can't honor them refuse loudly instead of dropping them
-        kw = dict(
-            sim_profile=args.sim_profile, seed=args.seed,
-            method=args.method, wire_codec=args.wire_codec,
-            client_weights=client_weights,
-            participation=participation,
-            checkpoint_dir=args.checkpoint_dir,
-            checkpoint_every=20 if args.checkpoint_dir else 0,
-        )
-        if args.engine == "async":
-            kw.update(
-                buffer_size=args.async_buffer,
-                staleness_power=args.staleness_power,
-            )
-        elif args.engine == "hier":
-            kw.update(
-                num_edges=args.edges, edge_rounds=args.edge_rounds,
-                edge_wire_codec=args.edge_wire_codec,
-            )
-        eng = make_sim_engine(args.engine, model.loss_fn, params, fc, **kw)
-    else:
-        eng = FederatedEngine(
-            model.loss_fn, params, fc, method=args.method,
-            participation=participation,
-            client_weights=client_weights,
-            checkpoint_dir=args.checkpoint_dir,
-            checkpoint_every=20 if args.checkpoint_dir else 0,
-            wire_codec=args.wire_codec,
-        )
-    hist = eng.train(batcher, args.rounds, log_every=args.log_every)
     mean_cohort = np.mean([r.cohort_size for r in hist])
+    # condition on the *scenario*, not `t_virtual`'s truthiness — a
+    # legitimately-zero clock reading (sync engine + profile at round 0)
+    # must still print the engine timing
     timing = (
-        f"; virtual time {hist[-1].t_virtual:.1f}s [{args.engine}]"
-        if hist[-1].t_virtual else ""
+        f"; virtual time {hist[-1].t_virtual:.1f}s [{spec.engine.kind}]"
+        if exp.is_simulated
+        else ""
     )
+    eng = exp.engine
     analytic = (
         f" vs {eng.comm_total_bytes_analytic()/1e6:.1f} MB analytic"
         if hasattr(eng, "comm_total_bytes_analytic") else ""
@@ -203,8 +212,8 @@ def main(argv=None):
     print(
         f"done: loss {hist[0].loss_before:.4f} → {hist[-1].loss_before:.4f}; "
         f"total comm {eng.comm_total_bytes()/1e6:.1f} MB measured "
-        f"[{args.wire_codec}]{analytic} (mean cohort {mean_cohort:.1f}/"
-        f"{args.clients}){timing}"
+        f"[{spec.wire.codec}]{analytic} (mean cohort {mean_cohort:.1f}/"
+        f"{spec.fed.clients}){timing}"
     )
     return hist
 

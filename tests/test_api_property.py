@@ -1,0 +1,147 @@
+"""Hypothesis property: randomized valid ExperimentSpecs round-trip
+losslessly through dict, TOML and JSON, with a serialization-invariant
+content hash.  (Skipped when hypothesis isn't installed — like
+tests/test_property.py.)"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+import json
+
+from hypothesis import given, settings, strategies as st
+
+from repro.api import (
+    CheckpointSpec,
+    DataSpec,
+    EngineSpec,
+    ExperimentSpec,
+    FedSpec,
+    ModelSpec,
+    ParticipationSpec,
+    SimSpec,
+    WireSpec,
+)
+
+NAME_ALPHABET = "abcdefghijklmnopqrstuvwxyz0123456789 -_:.\"\\"
+
+
+@st.composite
+def spec_strategy(draw):
+    clients = draw(st.integers(2, 16))
+    kind = draw(st.sampled_from(["sync", "async", "hier"]))
+    method, correction = draw(st.sampled_from([
+        ("fedlrt", "simplified"), ("fedlrt", "none"), ("fedlrt", "full"),
+        ("fedlrt", "auto"), ("fedavg", "auto"), ("fedavg", "none"),
+        ("fedlin", "none"), ("fedlrt_naive", "none"),
+    ]))
+    if kind == "sync":
+        mode = draw(st.sampled_from(["full", "uniform", "round_robin", "dropout"]))
+    else:
+        mode = "full"
+    participation = ParticipationSpec(
+        mode=mode,
+        cohort_size=(
+            draw(st.integers(1, clients))
+            if mode in ("uniform", "round_robin") else None
+        ),
+        dropout_prob=(
+            draw(st.floats(0.0, 0.9, allow_nan=False))
+            if mode == "dropout" else 0.0
+        ),
+    )
+    engine = EngineSpec(
+        kind=kind,
+        buffer_size=(
+            draw(st.none() | st.integers(1, clients)) if kind == "async" else None
+        ),
+        staleness_power=(
+            draw(st.none() | st.floats(0.0, 4.0, allow_nan=False))
+            if kind == "async" else None
+        ),
+        edges=(
+            draw(st.none() | st.integers(1, clients)) if kind == "hier" else None
+        ),
+        edge_rounds=(
+            draw(st.none() | st.integers(1, 3)) if kind == "hier" else None
+        ),
+    )
+    codec = st.sampled_from(
+        ["identity", "downcast", "downcast:float16", "int8_affine", "topk_rank"]
+    )
+    wire = WireSpec(
+        codec=draw(codec),
+        edge_codec=draw(st.none() | codec) if kind == "hier" else None,
+    )
+    if draw(st.booleans()):
+        model = ModelSpec(
+            kind="mlp",
+            dim=draw(st.integers(4, 64)),
+            classes=draw(st.integers(2, 10)),
+            hidden=draw(st.integers(4, 64)),
+            r_max=draw(st.integers(1, 16)),
+            lowrank=draw(st.booleans()),
+            kernels=draw(st.sampled_from(["auto", "interpret", "off"])),
+        )
+        data = DataSpec(
+            kind="classification",
+            batch=draw(st.integers(1, 64)),
+            num_points=draw(st.integers(64, 4096)),
+            noise=draw(st.floats(0.0, 1.0, allow_nan=False)),
+            planted_rank=draw(st.integers(1, 8)),
+            partition=draw(st.sampled_from(["iid", "dirichlet:0.3", "dirichlet:100"])),
+            holdout=draw(st.integers(0, 63)),
+        )
+    else:
+        preset = draw(st.none() | st.sampled_from(["llm-tiny", "llm-100m"]))
+        model = ModelSpec(
+            kind="lm",
+            preset=preset,
+            arch=None if preset else "qwen2-7b",
+            smoke=draw(st.booleans()),
+            kernels=draw(st.sampled_from(["auto", "interpret", "off"])),
+        )
+        data = DataSpec(
+            kind="token_stream",
+            batch=draw(st.integers(1, 16)),
+            seq=draw(st.integers(2, 256)),
+            tokens_per_client=draw(st.integers(1000, 300_000)),
+            stream_rank=draw(st.integers(1, 32)),
+        )
+    return ExperimentSpec(
+        name=draw(st.text(alphabet=NAME_ALPHABET, max_size=20)),
+        seed=draw(st.integers(0, 2**31 - 1)),
+        rounds=draw(st.integers(0, 1000)),
+        log_every=draw(st.integers(0, 100)),
+        model=model,
+        data=data,
+        fed=FedSpec(
+            method=method, correction=correction, clients=clients,
+            local_steps=draw(st.integers(0, 64)),
+            lr=draw(st.floats(1e-6, 10.0, allow_nan=False)),
+            tau=draw(st.floats(0.0, 0.999, allow_nan=False)),
+            weighted=draw(st.booleans()),
+            eval_after=draw(st.booleans()),
+        ),
+        participation=participation,
+        engine=engine,
+        wire=wire,
+        sim=SimSpec(profile=draw(st.none() | st.sampled_from([
+            "uniform", "straggler:0.25,10", "lognormal:0.6", "dropout:0.1,uniform",
+        ]))),
+        checkpoint=(
+            CheckpointSpec(dir=draw(st.none() | st.just("/tmp/ck")),
+                           every=draw(st.integers(0, 50)))
+            if kind != "hier" else CheckpointSpec()
+        ),
+    )
+
+
+@given(spec=spec_strategy())
+@settings(max_examples=60, deadline=None)
+def test_property_roundtrip(spec):
+    assert ExperimentSpec.from_dict(spec.to_dict()) == spec
+    assert ExperimentSpec.from_toml(spec.to_toml()) == spec
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+    assert json.loads(spec.to_json()) == spec.to_dict()
+    # hash survives every serialization path
+    h = spec.spec_hash()
+    assert ExperimentSpec.from_toml(spec.to_toml()).spec_hash() == h
