@@ -54,9 +54,11 @@ def table1_measured(emit=print):
         ("simplified", "fedlrt_simplified"),
         ("full", "fedlrt_full"),
     ):
+        # repro-lint: disable=RPL002 -- microbench of the raw round
+        # function: no engine in the loop, nothing for a spec to build
         cfg = FedConfig(num_clients=4, s_star=4, lr=1e-3, correction=corr,
                         tau=0.05, eval_after=False)
-        step = jax.jit(lambda p, b: fedlrt_round(loss, p, b, cfg))
+        step = jax.jit(lambda p, b, cfg=cfg: fedlrt_round(loss, p, b, cfg))
         p, m = step(f, {"x": x, "y": y})
         t0 = time.perf_counter()
         for _ in range(5):

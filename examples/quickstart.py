@@ -34,6 +34,9 @@ def main():
     params = init_factor(
         jax.random.PRNGKey(0), 20, 20, r_max=10, init_rank=10, spectrum_scale=1.0
     )
+    # repro-lint: disable=RPL002 -- this example deliberately demos the
+    # core API one layer below the engine (FedConfig + fedlrt_round);
+    # the spec-API quickstart is examples/vision_federated.py
     cfg = FedConfig(
         num_clients=4, s_star=20, lr=0.1, correction="full", tau=0.1
     )

@@ -1,0 +1,25 @@
+"""repro-lint: invariant static analysis + jit trace auditing.
+
+``python -m repro.analysis src/`` (or the ``repro-lint`` console script)
+runs the RPL rule catalog; :func:`trace_audit` is the dynamic twin that
+counts jit compilations per callsite.  See the README "Invariant checks"
+section for the rule ↔ invariant map and the suppression grammar.
+"""
+from repro.analysis.core import (
+    Finding,
+    Rule,
+    get_rules,
+    lint_paths,
+    register_rule,
+)
+from repro.analysis.trace_audit import TraceAudit, trace_audit
+
+__all__ = [
+    "Finding",
+    "Rule",
+    "TraceAudit",
+    "get_rules",
+    "lint_paths",
+    "register_rule",
+    "trace_audit",
+]

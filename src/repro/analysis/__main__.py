@@ -1,0 +1,70 @@
+"""CLI for repro-lint: ``python -m repro.analysis [paths...]``.
+
+Exit status 0 when the tree is clean, 1 when any finding survives
+suppression, 2 on usage errors — so CI and pre-commit can gate on it.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from repro.analysis.core import get_rules, lint_paths
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="invariant analyzer for the FeDLRT reproduction",
+    )
+    ap.add_argument(
+        "paths", nargs="*", default=["src"],
+        help="files or directories to lint (default: src)",
+    )
+    ap.add_argument(
+        "--select", metavar="IDS",
+        help="comma-separated rule ids to run (default: all)",
+    )
+    ap.add_argument(
+        "--ignore", metavar="IDS",
+        help="comma-separated rule ids to skip",
+    )
+    ap.add_argument(
+        "--list-rules", action="store_true",
+        help="print the rule catalog and exit",
+    )
+    ap.add_argument(
+        "--no-hints", action="store_true",
+        help="omit the autofix hints from output",
+    )
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in get_rules():
+            print(f"{rule.id}  [{rule.severity}]  {rule.title}")
+            if rule.hint:
+                print(f"        fix: {rule.hint}")
+        return 0
+
+    select = args.select.split(",") if args.select else None
+    ignore = args.ignore.split(",") if args.ignore else None
+    try:
+        findings = lint_paths(args.paths, select=select, ignore=ignore)
+    except ValueError as e:
+        print(f"repro-lint: {e}", file=sys.stderr)
+        return 2
+
+    for f in findings:
+        print(f.render(show_hint=not args.no_hints))
+    if findings:
+        print(
+            f"repro-lint: {len(findings)} finding(s) "
+            f"in {len({f.path for f in findings})} file(s)",
+            file=sys.stderr,
+        )
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,655 @@
+"""The repro-lint rule catalog: RPL001–RPL008.
+
+Each rule guards one invariant from the ROADMAP architecture map.  The
+docstring of every rule states the invariant, why it matters for the
+FeDLRT reproduction specifically, and what the sanctioned alternative is
+(which doubles as the autofix hint).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, Optional, Set
+
+from repro.analysis.core import (
+    Finding,
+    ModuleInfo,
+    PathInfo,
+    Rule,
+    base_chain_attrs,
+    call_name,
+    is_simple_expr,
+    register_rule,
+    scope_references,
+    walk_with_scope,
+)
+
+# ---------------------------------------------------------------------------
+# RPL001 — engines are built in exactly one place
+# ---------------------------------------------------------------------------
+
+#: engine constructors / factories with one sanctioned construction site
+ENGINE_NAMES = {
+    "FederatedEngine",
+    "SyncSimEngine",
+    "AsyncFederatedEngine",
+    "HierarchicalEngine",
+    "make_sim_engine",
+}
+
+#: files allowed to construct engines: the build() seam and the engine
+#: modules themselves (internal composition, e.g. hier wraps sync)
+ENGINE_HOMES = (
+    ("api", "experiment.py"),
+    ("fed", "engine.py"),
+    ("fed", "sim", "engines.py"),
+)
+
+
+@register_rule
+class NoAdHocEngines(Rule):
+    """No engine construction outside ``api.experiment.build()``.
+
+    PR 5 made ``build(spec)`` the single engine factory so that cohort
+    policy, wire codecs, checkpoint stamping and weighting can never be
+    silently dropped by a hand-rolled engine.  Constructing an engine
+    anywhere else reopens exactly that hole.
+    """
+
+    id = "RPL001"
+    title = "engine constructed outside api.experiment.build()"
+    severity = "error"
+    hint = (
+        "describe the scenario as an ExperimentSpec and call "
+        "repro.api.build(spec)"
+    )
+
+    def applies_to(self, info: PathInfo) -> bool:
+        if info.is_tests:
+            return False  # tests may construct engines to probe internals
+        return not any(info.under(*home) for home in ENGINE_HOMES)
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call):
+                name = call_name(node)
+                leaf = name.rsplit(".", 1)[-1]
+                if leaf in ENGINE_NAMES:
+                    yield self.finding(
+                        mod, node,
+                        f"`{leaf}(...)` called outside the build() seam",
+                    )
+
+
+# ---------------------------------------------------------------------------
+# RPL002 — entry points speak ExperimentSpec, not core primitives
+# ---------------------------------------------------------------------------
+
+#: core-layer constructors an entry point must not assemble by hand —
+#: each has an ExperimentSpec field / registry that replaces it
+SCENARIO_PRIMITIVES = {
+    "FedConfig": "FedSpec fields (lr/local_steps/tau/...)",
+    "Participation": "ParticipationSpec / participation string",
+    "Wire": "WireSpec.codec",
+    "make_codec": "WireSpec.codec",
+}
+
+
+@register_rule
+class NoAdHocScenarios(Rule):
+    """Entry points (``launch/``, ``examples/``, ``benchmarks/``) must route
+    scenario axes through :class:`ExperimentSpec` fields and registries,
+    never hand-assemble core config objects.
+
+    A scenario that exists only as an ad-hoc ``FedConfig(...)`` in a CLI
+    can't be hashed, stamped into checkpoints, or replayed from a JSON
+    spec — it silently forks the experiment-description surface PR 5
+    unified.
+    """
+
+    id = "RPL002"
+    title = "ad-hoc scenario construction in an entry point"
+    severity = "error"
+    hint = "add/use the ExperimentSpec field and let build() resolve it"
+
+    def applies_to(self, info: PathInfo) -> bool:
+        return info.is_entry_point and not info.is_tests
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call):
+                leaf = call_name(node).rsplit(".", 1)[-1]
+                if leaf in SCENARIO_PRIMITIVES:
+                    yield self.finding(
+                        mod, node,
+                        f"`{leaf}(...)` assembled in an entry point",
+                        hint=f"route through {SCENARIO_PRIMITIVES[leaf]}",
+                    )
+
+
+# ---------------------------------------------------------------------------
+# RPL003 — library code is deterministic
+# ---------------------------------------------------------------------------
+
+#: wall-clock and global-state RNG calls that make a run irreproducible
+NONDET_CALLS = {
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns",
+}
+NONDET_NP_RANDOM = {
+    "rand", "randn", "randint", "random", "choice", "permutation",
+    "shuffle", "normal", "uniform", "seed",
+}
+
+
+@register_rule
+class NoNondeterminism(Rule):
+    """No nondeterminism in library code.
+
+    Same spec + same seed must be the same run bit-for-bit on one host:
+    that is what makes the convergence plots reproducible and the
+    checkpoint spec-hash meaningful.  Wall-clock reads, ``random.*``,
+    legacy global-state ``np.random.*``, seedless ``default_rng()`` and
+    iteration over unordered containers all break that.  Timing belongs in
+    ``launch/`` / ``benchmarks/``; randomness comes from a seeded
+    generator or a threaded PRNG key.
+    """
+
+    id = "RPL003"
+    title = "nondeterminism in library code"
+    severity = "error"
+    hint = (
+        "thread a seeded np.random.default_rng(seed) / jax PRNG key, or "
+        "move timing into launch//benchmarks/"
+    )
+
+    def applies_to(self, info: PathInfo) -> bool:
+        if info.is_tests or info.is_benchmarks or info.is_examples:
+            return False
+        if not info.repro:
+            return False
+        return not info.under("launch")
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call):
+                yield from self._check_call(mod, node)
+            elif isinstance(node, ast.For):
+                yield from self._check_loop(mod, node)
+
+    def _check_call(self, mod: ModuleInfo, node: ast.Call) -> Iterator[Finding]:
+        name = call_name(node)
+        if name in NONDET_CALLS:
+            yield self.finding(mod, node, f"wall-clock read `{name}()`")
+            return
+        parts = name.split(".")
+        if parts[0] == "random" and len(parts) == 2:
+            yield self.finding(
+                mod, node, f"global-state stdlib RNG `{name}()`"
+            )
+            return
+        if (
+            len(parts) >= 3
+            and parts[-2] == "random"
+            and parts[-1] in NONDET_NP_RANDOM
+            # np.random.randn / numpy.random.seed; jax.random is excluded
+            # (jax.random.<fn> always takes an explicit key)
+            and parts[0] in ("np", "numpy")
+        ):
+            yield self.finding(
+                mod, node, f"legacy global-state `{name}()`"
+            )
+            return
+        if parts[-1] == "default_rng" and not node.args and not node.keywords:
+            yield self.finding(
+                mod, node, "`default_rng()` without a seed is OS-entropy seeded"
+            )
+        if parts[-1] == "listdir":
+            yield self.finding(
+                mod, node,
+                "`os.listdir()` order is filesystem-dependent",
+                hint="wrap in sorted(...)",
+            )
+
+    def _check_loop(self, mod: ModuleInfo, node: ast.For) -> Iterator[Finding]:
+        it = node.iter
+        if isinstance(it, ast.Set) or (
+            isinstance(it, ast.Call) and call_name(it) == "set"
+        ):
+            yield self.finding(
+                mod, node,
+                "iterating a set: order varies across processes "
+                "(PYTHONHASHSEED)",
+                hint="iterate sorted(...) or keep an ordered container",
+            )
+
+
+# ---------------------------------------------------------------------------
+# RPL004 — jit discipline in traced modules
+# ---------------------------------------------------------------------------
+
+#: modules whose functions run under jit tracing (pure-jax land)
+TRACED_MODULES = (("core",), ("kernels",))
+
+
+def _jitted_defs(tree: ast.AST) -> Set[str]:
+    """Names of functions that are jit-decorated or passed to jax.jit
+    within this module (a static under-approximation of 'traced')."""
+    jitted: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                d = dec.func if isinstance(dec, ast.Call) else dec
+                name = ""
+                if isinstance(d, (ast.Name, ast.Attribute)):
+                    name = call_name(ast.Call(func=d, args=[], keywords=[]))
+                if name.endswith("jit") or name.endswith("custom_vjp"):
+                    jitted.add(node.name)
+        elif (
+            isinstance(node, ast.Call)
+            and call_name(node).endswith("jit")
+            and node.args
+            and isinstance(node.args[0], ast.Name)
+        ):
+            jitted.add(node.args[0].id)
+    return jitted
+
+
+@register_rule
+class JitDiscipline(Rule):
+    """Traced code must stay traceable: no host ``numpy`` inside traced
+    functions, no Python-side branching on (potentially) traced values.
+
+    ``if x:`` or ``float(x)`` on a tracer raises ``ConcretizationError``
+    at best — or silently freezes a data-dependent decision at trace time
+    at worst, which is how the adaptive-rank logic would quietly become a
+    constant.  ``core/`` and ``kernels/`` are all-traced by contract, so a
+    module-level ``import numpy`` there is flagged too.
+    """
+
+    id = "RPL004"
+    title = "jit-discipline violation in traced code"
+    severity = "error"
+    hint = (
+        "use jnp/lax primitives (jnp.where, lax.cond) and keep host-side "
+        "numpy out of traced modules"
+    )
+
+    def applies_to(self, info: PathInfo) -> bool:
+        if info.is_tests:
+            return False
+        return bool(info.repro)
+
+    def _in_traced_module(self, info: PathInfo) -> bool:
+        return any(info.under(*m) for m in TRACED_MODULES)
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        traced_module = self._in_traced_module(mod.info)
+        jitted = _jitted_defs(mod.tree)
+
+        if traced_module:
+            for node in ast.walk(mod.tree):
+                if isinstance(node, ast.Import):
+                    for alias in node.names:
+                        if alias.name == "numpy" or alias.name.startswith("numpy."):
+                            yield self.finding(
+                                mod, node,
+                                "host `numpy` imported in a traced module",
+                            )
+                elif isinstance(node, ast.ImportFrom) and node.module and (
+                    node.module == "numpy" or node.module.startswith("numpy.")
+                ):
+                    yield self.finding(
+                        mod, node,
+                        "host `numpy` imported in a traced module",
+                    )
+
+        # inside statically-known traced defs: numpy calls and Python
+        # branching on parameters (tracers)
+        for fn in ast.walk(mod.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if fn.name not in jitted:
+                continue
+            params = {
+                a.arg
+                for a in (
+                    fn.args.posonlyargs + fn.args.args + fn.args.kwonlyargs
+                )
+            }
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call):
+                    name = call_name(node)
+                    if name.split(".")[0] in ("np", "numpy"):
+                        yield self.finding(
+                            mod, node,
+                            f"host call `{name}()` inside jitted "
+                            f"`{fn.name}` will run at trace time",
+                        )
+                    elif (
+                        name in ("float", "int", "bool")
+                        and node.args
+                        and not isinstance(node.args[0], ast.Constant)
+                        and isinstance(node.args[0], ast.Name)
+                        and node.args[0].id in params
+                    ):
+                        yield self.finding(
+                            mod, node,
+                            f"`{name}()` on traced argument "
+                            f"`{node.args[0].id}` concretizes the tracer",
+                        )
+                elif isinstance(node, ast.If):
+                    t = node.test
+                    if isinstance(t, ast.Name) and t.id in params:
+                        yield self.finding(
+                            mod, node,
+                            f"Python `if {t.id}:` on a traced argument "
+                            f"inside jitted `{fn.name}`",
+                            hint="use jnp.where or lax.cond",
+                        )
+
+
+# ---------------------------------------------------------------------------
+# RPL005 — factor-layout writes re-mask inactive columns
+# ---------------------------------------------------------------------------
+
+FACTOR_NAMES = {"LowRankFactor", "AugmentedFactor"}
+MASK_NAMES = {
+    "rank_mask", "augmented_mask", "mask_coeff", "coeff_grad_mask",
+    "init_factor", "check_invariants",
+}
+FACTOR_LEAVES = {"U", "S", "V"}
+
+
+@register_rule
+class FactorLayoutWrites(Rule):
+    """Writes into factor buffers must re-assert the zero-inactive-columns
+    layout.
+
+    The whole fixed-width masked-rank design (fused Pallas kernels ≡
+    masked reference, lossless ``topk_rank``, sound async Galerkin
+    transport) rests on U/V columns and S rows/cols beyond ``rank`` being
+    *exactly* zero.  A factor assembled from freshly computed tensors, or
+    an ``.at[...].set`` on a factor leaf, without a mask in scope is how
+    that invariant dies silently.
+    """
+
+    id = "RPL005"
+    title = "factor buffer written without an inactive-column re-mask"
+    severity = "error"
+    hint = (
+        "apply rank_mask/augmented_mask/mask_coeff (or build via "
+        "init_factor) in the same function"
+    )
+
+    def applies_to(self, info: PathInfo) -> bool:
+        if info.is_tests:
+            return False
+        return bool(info.repro)
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        for node, scope in walk_with_scope(mod.tree):
+            if isinstance(node, ast.Call):
+                leaf = call_name(node).rsplit(".", 1)[-1]
+                if leaf in FACTOR_NAMES:
+                    fresh = [
+                        kw.arg
+                        for kw in node.keywords
+                        if kw.arg in FACTOR_LEAVES
+                        and not is_simple_expr(kw.value)
+                    ]
+                    if fresh and not scope_references(scope, MASK_NAMES, mod):
+                        yield self.finding(
+                            mod, node,
+                            f"`{leaf}` built from computed "
+                            f"{'/'.join(fresh)} with no mask in scope",
+                        )
+            elif isinstance(node, ast.Attribute) and node.attr in ("set", "add"):
+                # f.U.at[...].set(...) — the base object chain must name a
+                # factor leaf AND .at; args of the call are not the base
+                chain = base_chain_attrs(node.value)
+                if (
+                    "at" in chain
+                    and chain & FACTOR_LEAVES
+                    and not scope_references(scope, MASK_NAMES, mod)
+                ):
+                    yield self.finding(
+                        mod, node,
+                        "in-place update of a factor leaf with no "
+                        "mask in scope",
+                    )
+
+
+# ---------------------------------------------------------------------------
+# RPL006 — codec protocol conformance
+# ---------------------------------------------------------------------------
+
+#: WireCodec protocol: method -> (required positional arity incl. self)
+CODEC_PROTOCOL = {"encode": 2, "decode": 2, "nbytes": 2}
+
+
+@register_rule
+class CodecConformance(Rule):
+    """Every concrete ``*Codec`` implements the full WireCodec protocol
+    (``encode``/``decode``/``nbytes``, each ``(self, payload-or-msg)``),
+    carries a ``name``, and is registered.
+
+    The wire layer dispatches codecs by name through ``_CODECS`` /
+    ``make_codec``; a codec missing ``nbytes`` silently reports zero
+    measured communication, which corrupts every comm-cost figure.
+    """
+
+    id = "RPL006"
+    title = "WireCodec protocol violation"
+    severity = "error"
+    hint = (
+        "define encode/decode/nbytes(self, x), set `name`, and add the "
+        "codec to the registry"
+    )
+
+    def applies_to(self, info: PathInfo) -> bool:
+        return bool(info.repro) and not info.is_tests
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        classes = [
+            n for n in ast.walk(mod.tree) if isinstance(n, ast.ClassDef)
+        ]
+        for cls in classes:
+            if not cls.name.endswith("Codec"):
+                continue
+            if cls.name == "WireCodec":
+                continue  # the protocol itself
+            bases = {call_name(ast.Call(func=b, args=[], keywords=[]))
+                     for b in cls.bases if isinstance(b, (ast.Name, ast.Attribute))}
+            if "Protocol" in {b.rsplit(".", 1)[-1] for b in bases}:
+                continue
+            yield from self._check_codec(mod, cls)
+
+    def _check_codec(self, mod: ModuleInfo, cls: ast.ClassDef) -> Iterator[Finding]:
+        methods: Dict[str, ast.FunctionDef] = {
+            n.name: n for n in cls.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        }
+        for meth, arity in CODEC_PROTOCOL.items():
+            fn = methods.get(meth)
+            if fn is None:
+                yield self.finding(
+                    mod, cls,
+                    f"codec `{cls.name}` is missing `{meth}()`",
+                )
+                continue
+            npos = len(fn.args.posonlyargs) + len(fn.args.args)
+            required = npos - len(fn.args.defaults)
+            if required > arity or (npos < arity and not fn.args.vararg):
+                yield self.finding(
+                    mod, fn,
+                    f"`{cls.name}.{meth}` signature differs from the "
+                    f"protocol's ({arity - 1} argument beyond self)",
+                )
+        if not self._has_name(cls, methods.get("__init__")):
+            yield self.finding(
+                mod, cls, f"codec `{cls.name}` defines no `name`",
+            )
+        if not self._registered(mod, cls):
+            yield self.finding(
+                mod, cls,
+                f"codec `{cls.name}` is never registered for "
+                "make_codec dispatch",
+            )
+
+    @staticmethod
+    def _has_name(cls: ast.ClassDef, init: Optional[ast.FunctionDef]) -> bool:
+        for stmt in cls.body:
+            if isinstance(stmt, ast.Assign):
+                for t in stmt.targets:
+                    if isinstance(t, ast.Name) and t.id == "name":
+                        return True
+            elif isinstance(stmt, ast.AnnAssign) and (
+                isinstance(stmt.target, ast.Name) and stmt.target.id == "name"
+            ):
+                return True
+        if init is not None:
+            for n in ast.walk(init):
+                if (
+                    isinstance(n, ast.Attribute)
+                    and n.attr == "name"
+                    and isinstance(n.value, ast.Name)
+                    and n.value.id == "self"
+                    and isinstance(getattr(n, "ctx", None), ast.Store)
+                ):
+                    return True
+        return False
+
+    @staticmethod
+    def _registered(mod: ModuleInfo, cls: ast.ClassDef) -> bool:
+        span = set(range(cls.lineno, (cls.end_lineno or cls.lineno) + 1))
+        for n in ast.walk(mod.tree):
+            if (
+                isinstance(n, ast.Name)
+                and n.id == cls.name
+                and n.lineno not in span
+            ):
+                return True
+        return False
+
+
+# ---------------------------------------------------------------------------
+# RPL007 — pickle only behind the versioned checkpoint sidecar
+# ---------------------------------------------------------------------------
+
+
+@register_rule
+class NoRawPickle(Rule):
+    """No raw ``pickle.load`` outside the versioned checkpoint sidecar.
+
+    Unversioned pickles are both an arbitrary-code-execution surface and
+    a schema time bomb (a dataclass rename breaks every old artifact).
+    Checkpoints go through the sidecar (``STATE_VERSION``-stamped,
+    JSON-safe dicts); anything else should be npz/json.
+    """
+
+    id = "RPL007"
+    title = "raw pickle deserialization"
+    severity = "error"
+    hint = "use the versioned checkpoint sidecar or npz/json"
+
+    def applies_to(self, info: PathInfo) -> bool:
+        return not info.is_tests
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            parts = name.split(".")
+            if parts[0] in ("pickle", "cPickle", "dill") and parts[-1] in (
+                "load", "loads", "Unpickler",
+            ):
+                yield self.finding(mod, node, f"raw `{name}()`")
+            elif parts[-1] == "load" and parts[0] in ("np", "numpy"):
+                for kw in node.keywords:
+                    if (
+                        kw.arg == "allow_pickle"
+                        and isinstance(kw.value, ast.Constant)
+                        and kw.value.value is True
+                    ):
+                        yield self.finding(
+                            mod, node,
+                            "`np.load(..., allow_pickle=True)` "
+                            "deserializes pickles",
+                        )
+
+
+# ---------------------------------------------------------------------------
+# RPL008 — every *Spec field participates in validation or build()
+# ---------------------------------------------------------------------------
+
+
+@register_rule
+class SpecValidationParity(Rule):
+    """Every field declared on a ``*Spec`` dataclass must appear in at
+    least one validation rule or ``build()`` branch.
+
+    A spec field nothing reads is worse than dead code: two specs that
+    differ only in it hash differently while running identically, so the
+    checkpoint spec-hash guard rejects resumes that are actually fine —
+    or, if the field was *meant* to change behavior, the scenario silently
+    doesn't vary.
+    """
+
+    id = "RPL008"
+    title = "*Spec field unused by validation and build()"
+    severity = "error"
+    hint = (
+        "validate it in the spec's __post_init__ (or a _validate_* rule) "
+        "or consume it in build()/tasks"
+    )
+
+    #: files consuming spec fields, relative to the spec module's directory
+    SIBLINGS = ("experiment.py", "tasks.py")
+
+    def applies_to(self, info: PathInfo) -> bool:
+        return info.under("api", "spec.py")
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        import os
+
+        from repro.analysis.core import parse_module
+
+        consumers = [mod]
+        here = os.path.dirname(mod.path)
+        for sib in self.SIBLINGS:
+            m, _err = parse_module(os.path.join(here, sib))
+            if m is not None:
+                consumers.append(m)
+
+        used: Set[str] = set()
+        for c in consumers:
+            for n in ast.walk(c.tree):
+                if isinstance(n, ast.Attribute):
+                    used.add(n.attr)
+                elif isinstance(n, ast.keyword) and n.arg:
+                    used.add(n.arg)
+                elif isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    used.add(n.value)
+
+        for cls in ast.walk(mod.tree):
+            if not (isinstance(cls, ast.ClassDef) and cls.name.endswith("Spec")):
+                continue
+            for stmt in cls.body:
+                if not (
+                    isinstance(stmt, ast.AnnAssign)
+                    and isinstance(stmt.target, ast.Name)
+                ):
+                    continue
+                field = stmt.target.id
+                if field.startswith("_"):
+                    continue
+                # the AnnAssign target is an ast.Name, so the declaration
+                # itself never lands in `used` (which collects attribute
+                # accesses, keyword args, and exact string constants)
+                if field not in used:
+                    yield self.finding(
+                        mod, stmt,
+                        f"`{cls.name}.{field}` appears in no validation "
+                        "rule or build() branch",
+                    )

@@ -1,0 +1,112 @@
+"""Dynamic twin of the static pass: count jit compilations per callsite.
+
+The engines' jit discipline is "one executable per (cohort size, weighted)
+key": the dropout participation path pads every cohort to the population
+size with zero-weight filler clients precisely so a whole run reuses ONE
+compiled step.  A static rule can't see retracing — this context manager
+can.  It monkeypatches ``jax.jit`` so every function jitted *while the
+audit is active* records, per **callsite** (the ``jax.jit(...)`` source
+location plus the wrapped function's identity), how many distinct traces
+JAX performed.  Counting per callsite rather than per jitted object is
+what makes the padding bug visible: a broken padding path builds one
+executable per cohort size, each traced once, all charged to the same
+``jax.jit(raw, ...)`` line in ``FederatedEngine._step_for``.
+
+Usage::
+
+    with trace_audit() as audit:
+        engine.train(batcher, rounds)
+    audit.assert_within_limit()        # ≤1 trace per callsite by default
+
+or via the ``jit_trace_audit`` pytest fixture (tests/conftest.py), which
+fails the test on exit if any callsite retraced.
+
+This works because the engines look ``jax.jit`` up at call time
+(``jax.jit(raw, donate_argnums=...)`` inside ``_step_for``), so patching
+the attribute on the ``jax`` module intercepts them without any import
+gymnastics.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+from typing import Dict, Iterator, List, Tuple
+
+import jax
+
+#: (filename, firstlineno, qualname) of the function handed to jax.jit
+Site = Tuple[str, int, str]
+
+
+@dataclasses.dataclass
+class TraceAudit:
+    """Mutable audit record: trace counts per jit callsite."""
+
+    limit: int = 1
+    counts: Dict[Site, int] = dataclasses.field(default_factory=dict)
+
+    def record(self, site: Site) -> None:
+        self.counts[site] = self.counts.get(site, 0) + 1
+
+    def total(self) -> int:
+        return sum(self.counts.values())
+
+    def violations(self) -> List[Tuple[Site, int]]:
+        """Callsites that compiled more often than ``limit``."""
+        return sorted(
+            (s, n) for s, n in self.counts.items() if n > self.limit
+        )
+
+    def assert_within_limit(self) -> None:
+        bad = self.violations()
+        if bad:
+            lines = "\n".join(
+                f"  {fn}:{ln} ({qn}): {n} traces (limit {self.limit})"
+                for (fn, ln, qn), n in bad
+            )
+            raise AssertionError(
+                "jit retrace audit failed — the engine recompiled where it "
+                f"should reuse one executable:\n{lines}\n"
+                "(dropout cohorts must be padded to a fixed size with "
+                "zero-weight clients; see ROADMAP 'jit discipline')"
+            )
+
+
+def _site_of(fun) -> Site:
+    code = getattr(fun, "__code__", None)
+    if code is None:  # partial / callable object: fall back to repr
+        inner = getattr(fun, "func", None)
+        code = getattr(inner, "__code__", None)
+    if code is None:
+        return ("<unknown>", 0, getattr(fun, "__qualname__", repr(fun)))
+    return (
+        code.co_filename,
+        code.co_firstlineno,
+        getattr(fun, "__qualname__", code.co_name),
+    )
+
+
+@contextlib.contextmanager
+def trace_audit(limit: int = 1) -> Iterator[TraceAudit]:
+    """Patch ``jax.jit`` to count traces per callsite while active."""
+    audit = TraceAudit(limit=limit)
+    real_jit = jax.jit
+
+    def auditing_jit(fun=None, **jit_kwargs):
+        if fun is None:  # decorator-with-arguments form: @jax.jit(static_...)
+            return lambda f: auditing_jit(f, **jit_kwargs)
+        site = _site_of(fun)
+
+        @functools.wraps(fun)
+        def counted(*args, **kwargs):
+            audit.record(site)
+            return fun(*args, **kwargs)
+
+        return real_jit(counted, **jit_kwargs)
+
+    jax.jit = auditing_jit
+    try:
+        yield audit
+    finally:
+        jax.jit = real_jit

@@ -19,6 +19,7 @@ to a small built-in parser of the same subset on 3.10.
 """
 from typing import Union, get_args, get_origin
 
+import contextlib
 import dataclasses
 import hashlib
 import json
@@ -173,10 +174,8 @@ def _parse_toml_scalar(s: str, where: str):
         return True
     if s == "false":
         return False
-    try:
+    with contextlib.suppress(ValueError):
         return int(s)
-    except ValueError:
-        pass
     try:
         return float(s)
     except ValueError:
@@ -189,12 +188,10 @@ def _parse_toml_scalar(s: str, where: str):
 def toml_loads(text: str) -> dict:
     """Parse the flat TOML subset ``toml_dumps`` writes (stdlib
     :mod:`tomllib` when available, built-in fallback on 3.10)."""
-    try:
+    with contextlib.suppress(ModuleNotFoundError):
         import tomllib
 
         return tomllib.loads(text)
-    except ModuleNotFoundError:
-        pass
     out: dict = {}
     current = out
     for lineno, raw in enumerate(text.splitlines(), 1):

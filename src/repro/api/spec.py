@@ -407,6 +407,21 @@ class ExperimentSpec:
                         f"unknown model.preset {self.model.preset!r}; "
                         f"presets: {sorted(PRESETS)}"
                     )
+        if self.model.kind == "lsq":
+            if self.data.partition != "iid":
+                raise ValueError(
+                    "the homogeneous lsq problem is generated pre-sharded "
+                    f"with identical client distributions; data.partition="
+                    f"{self.data.partition!r} is meaningless for it (use "
+                    "'iid', or the heterogeneous problem via the core API)"
+                )
+            if self.data.num_points % self.fed.clients:
+                raise ValueError(
+                    f"data.num_points ({self.data.num_points}) must divide "
+                    f"evenly across fed.clients ({self.fed.clients}) for "
+                    f"the lsq task — trailing points would be dropped "
+                    f"silently"
+                )
         if self.data.kind == "token_stream" and self.data.partition != "iid":
             raise ValueError(
                 "the token-stream pipeline partitions windows iid; "

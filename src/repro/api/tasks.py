@@ -16,6 +16,9 @@ Built-ins:
   layer is FeDLRT-factorized (when the method is low-rank), on synthetic
   classification data with a planted low-rank decision map, Dirichlet or
   iid split, with a held-out accuracy eval.
+- ``lsq`` — the paper's §5.1 homogeneous distributed least-squares
+  problem (planted low-rank target, identical client distributions): the
+  convergence-theorem testbed the ablation benchmarks sweep.
 """
 import dataclasses
 from typing import Callable, Dict, Optional, Tuple
@@ -238,5 +241,68 @@ def _build_mlp(spec) -> Task:
     )
 
 
+# ---------------------------------------------------------------------------
+# lsq: the §5.1 homogeneous least-squares convergence testbed
+# ---------------------------------------------------------------------------
+
+
+def _build_lsq(spec) -> Task:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import init_factor
+    from repro.core.factorization import is_factor
+    from repro.data import FederatedBatcher, make_homogeneous_lsq
+
+    m, d = spec.model, spec.data
+    prob = make_homogeneous_lsq(
+        n=m.dim, rank=d.planted_rank, num_points=d.num_points,
+        num_clients=spec.fed.clients, seed=spec.seed,
+    )
+    C, N_c = prob.px.shape[0], prob.px.shape[1]
+    arrays = {
+        "px": prob.px.reshape(-1, prob.px.shape[-1]),
+        "py": prob.py.reshape(-1, prob.py.shape[-1]),
+        "t": prob.target.reshape(-1),
+    }
+    # the problem is generated pre-sharded (homogeneous): client c owns the
+    # contiguous row block [c·N_c, (c+1)·N_c)
+    parts = [list(range(c * N_c, (c + 1) * N_c)) for c in range(C)]
+    batcher = FederatedBatcher(
+        arrays, parts, batch_size=min(d.batch, N_c), seed=spec.seed
+    )
+
+    lowrank = m.lowrank and spec.fed.method.startswith("fedlrt")
+    if lowrank:
+        params = init_factor(
+            jax.random.PRNGKey(spec.seed), m.dim, m.dim,
+            r_max=m.r_max, init_rank=m.r_max, spectrum_scale=1.0,
+        )
+    else:
+        params = jnp.zeros((m.dim, m.dim))
+
+    def loss_fn(p, batch):
+        if is_factor(p):
+            pred = jnp.sum(
+                ((batch["px"] @ p.U) @ p.S) * (batch["py"] @ p.V), -1
+            )
+        else:
+            pred = jnp.sum((batch["px"] @ p) * batch["py"], -1)
+        return 0.5 * jnp.mean((pred - batch["t"]) ** 2)
+
+    return Task(
+        loss_fn=loss_fn,
+        params=params,
+        batcher=batcher,
+        client_sizes=np.full(C, N_c),
+        description=(
+            f"homogeneous lsq n={m.dim} rank*={d.planted_rank} "
+            f"({'rank≤' + str(m.r_max) if lowrank else 'dense'}, "
+            f"{N_c}/client)"
+        ),
+    )
+
+
 register_task("lm", _build_lm, data_kinds=("token_stream",))
 register_task("mlp", _build_mlp, data_kinds=("classification",))
+register_task("lsq", _build_lsq, data_kinds=("lsq",))

@@ -90,6 +90,9 @@ def load_checkpoint(path: str):
     for k, fields in factors.items():
         insert(
             k,
+            # repro-lint: disable=RPL005 -- restores verbatim buffers that
+            # were saved under the invariant; masking here would silently
+            # repair (and so hide) a corrupted checkpoint
             LowRankFactor(
                 U=jnp.asarray(fields["U"]),
                 S=jnp.asarray(fields["S"]),

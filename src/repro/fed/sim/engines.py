@@ -34,6 +34,7 @@ The round programs, kernels and codecs are untouched — the engines only
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Callable, List, Optional, Sequence
@@ -104,13 +105,11 @@ def _analytic_round_bytes(params, method: str, correction: str) -> float:
     """Per-client bytes of one round under the paper's multi-message
     protocol — the ``comm_bytes_per_client`` convention of the round
     metrics (0.0 for methods the cost model doesn't know)."""
-    try:
+    with contextlib.suppress(ValueError, TypeError, KeyError):
         if method.startswith("fedlrt") and not method.startswith("fedlrt_naive"):
             return float(cost_model.fedlrt_round_comm_bytes(params, correction))
         if method in ("fedavg", "fedlin"):
             return float(cost_model.dense_round_comm_bytes(params, method))
-    except (ValueError, TypeError, KeyError):
-        pass
     return 0.0
 
 
@@ -578,6 +577,9 @@ class AsyncFederatedEngine(FederatedEngine):
         applied FedBuff-style instead: discounted deltas projected onto
         the current params, no rank adaptation this round.
         """
+        # repro-lint: disable=RPL003 -- wall-clock feeds only the
+        # RoundResult.seconds telemetry field; simulated time comes from
+        # the deterministic virtual clock, never from time.time
         t0 = time.time()
         program, cfg = self._program, self.cfg
         K = len(arrivals)
@@ -671,6 +673,7 @@ class AsyncFederatedEngine(FederatedEngine):
             loss_after=loss_after,
             comm_bytes_per_client=comm,
             ranks=ranks,
+            # repro-lint: disable=RPL003 -- telemetry only (see t0 above)
             seconds=time.time() - t0,
             cohort_size=K,
             cohort=np.asarray([a.client for a in arrivals]),

@@ -97,6 +97,9 @@ def lower_combo(arch: str, shape_name: str, *, multi_pod: bool, s_star: int = 4,
     if shape.kind == "train":
         C = data_axis_size(mesh)
         bstructs, bspecs = train_specs(cfg, shape, C, mesh)
+        # repro-lint: disable=RPL002 -- offline lowering probe: builds a
+        # throwaway FedConfig purely to trace shapes/HLO, never to run a
+        # scenario (no data, no engine, nothing to spec-hash)
         fc = FedConfig(
             num_clients=C, s_star=s_star, lr=1e-2, correction=correction,
             tau=0.01, eval_after=False,
@@ -157,7 +160,7 @@ def lower_combo(arch: str, shape_name: str, *, multi_pod: bool, s_star: int = 4,
         # the FeDLRT round does (1 basis-grad + s_star coeff) fwd+bwd passes
         mflops = mflops * (1 + s_star)
     n_dev = mesh.devices.size
-    result = {
+    return {
         "arch": arch,
         "shape": shape_name,
         "mesh": "2x16x16" if multi_pod else "16x16",
@@ -178,7 +181,6 @@ def lower_combo(arch: str, shape_name: str, *, multi_pod: bool, s_star: int = 4,
             if roof.flops_per_device else None
         ),
     }
-    return result
 
 
 def run_one(args):

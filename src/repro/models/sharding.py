@@ -113,6 +113,8 @@ def shard(x, *logical_axes):
 
 def factor_spec(batch_axes: Tuple[Optional[str], ...], li: Optional[str], lo: Optional[str]):
     """Sharding pytree for a LowRankFactor with logical dims (li → lo)."""
+    # repro-lint: disable=RPL005 -- a pytree *template* of PartitionSpecs
+    # in factor shape, not tensor data; there are no columns to mask
     return LowRankFactor(
         U=spec(*batch_axes, li, "rank"),
         S=spec(*batch_axes, "rank", "rank"),

@@ -315,7 +315,7 @@ def stack_apply(
         h = sharding.shard(h, "batch", "seq", None)
         p_sb, c_sb = xs
         new_c = {}
-        for i, kind in enumerate(pattern):
+        for i, _kind in enumerate(pattern):
             c_i = c_sb.get(f"pos{i}") if c_sb is not None else None
             h, nc, a = block_fns[i](p_sb[f"pos{i}"], h, c_i)
             if nc is not None:

@@ -54,3 +54,21 @@ def hetero_prob():
 @pytest.fixture(scope="session")
 def rng_key():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def jit_trace_audit():
+    """Fail the test if any jit callsite compiles more than once.
+
+    Yields the live :class:`repro.analysis.TraceAudit` (counts per
+    callsite; ``audit.limit`` is mutable for tests that legitimately
+    expect N executables).  On exit, the fixture asserts every callsite
+    stayed within the limit — the executable gate for the ROADMAP's
+    "jit discipline" bullet (one executable per (cohort size, weighted)
+    key; dropout cohorts padded with zero-weight clients).
+    """
+    from repro.analysis import trace_audit
+
+    with trace_audit() as audit:
+        yield audit
+    audit.assert_within_limit()

@@ -54,7 +54,7 @@ def test_naive_fedlrt_round_runs(homo_prob, rng_key):
     cfg = FedConfig(num_clients=4, s_star=1, lr=0.1, tau=0.05, eval_after=True)
     step = jax.jit(lambda p, b: fedlrt_naive_round(lsq_loss, p, b, cfg))
     m0 = None
-    for i in range(50):
+    for _ in range(50):
         f, m = step(f, batches)
         m0 = m0 or m
     assert float(m["loss_after"]) < float(m0["loss_before"])
