@@ -1,0 +1,72 @@
+"""Analyzer-cost benchmark: repro-lint wall-clock over the shipped tree.
+
+The dataflow tier (CFG construction + taint/shape fixpoints) made the
+analyzer meaningfully more expensive than the old single-pass lexical
+walk, and it now runs on every commit (pre-commit) and every PR (CI
+``invariants`` job).  This group keeps that cost measurable across PRs:
+
+  lint_full_tree       one full run over src/benchmarks/examples
+  lint_kernels_rpl009  the shape interpreter alone on kernels/ops.py
+  lint_taint_rpl005    the taint fixpoints alone over src
+  lint_sarif_roundtrip SARIF emit + fingerprint + baseline diff overhead
+
+Rows follow the harness CSV: ``name,us_per_call,derived`` where derived
+is files-scanned (full tree) or findings (rule groups — 0 on a clean
+tree, by design).
+"""
+from __future__ import annotations
+
+import time
+
+
+def _time(fn, repeats: int):
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6, out
+
+
+def lint_overhead(repeats: int = 3) -> None:
+    from repro.analysis.core import lint_paths
+    from repro.analysis.sarif import diff_baseline, dump_sarif, load_baseline
+
+    paths = ["src", "benchmarks", "examples"]
+
+    us, findings = _time(lambda: lint_paths(paths), repeats)
+    import glob
+    import json
+
+    n_files = sum(
+        len(glob.glob(f"{p}/**/*.py", recursive=True)) for p in paths
+    )
+    print(f"lint_full_tree,{us:.0f},{n_files}")
+
+    us, f9 = _time(lambda: lint_paths(paths, select=["RPL009"]), repeats)
+    print(f"lint_kernels_rpl009,{us:.0f},{len(f9)}")
+
+    us, f5 = _time(lambda: lint_paths(paths, select=["RPL005"]), repeats)
+    print(f"lint_taint_rpl005,{us:.0f},{len(f5)}")
+
+    def roundtrip():
+        log = dump_sarif(findings, ".")
+        baseline = {
+            res.get("fingerprints", {}).get("reproLint/v1")
+            for run in json.loads(log).get("runs", [])
+            for res in run.get("results", [])
+        } - {None}
+        return diff_baseline(findings, baseline, ".")
+
+    us, (new, old) = _time(roundtrip, repeats)
+    print(f"lint_sarif_roundtrip,{us:.0f},{len(new)}")
+
+    # keep the committed baseline honest: loading it must subtract
+    # everything the shipped tree produces
+    try:
+        known = load_baseline("analysis-baseline.sarif")
+    except OSError:
+        return
+    gating, _ = diff_baseline(findings, known, ".")
+    print(f"lint_baseline_gating,0,{len(gating)}")

@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   kernel_*     low-rank chain vs dense matmul + Pallas interpret check
   sim_*        system simulator: time-to-target-loss, engines × stragglers
   roofline_*   dry-run roofline terms (requires results/dryrun/*.json)
+  lint_*       repro-lint analyzer cost (dataflow tier runs on every PR)
 
 Besides printing, every group persists its rows as a per-PR artifact
 ``<out-dir>/BENCH_<group>.json`` (schema: ``bench``, ``rows``,
@@ -87,7 +88,7 @@ def main() -> None:
     ap.add_argument(
         "--only", type=str, default=None,
         help="comma-separated subset: lsq,costs,cv,wire,kernels,sim,"
-        "ablation,roofline",
+        "ablation,roofline,lint",
     )
     ap.add_argument(
         "--out-dir", type=str, default="results",
@@ -157,6 +158,11 @@ def main() -> None:
 
         with _record("roofline", args.out_dir, git_sha):
             roofline_table()
+    if want("lint"):
+        from benchmarks.bench_lint import lint_overhead
+
+        with _record("lint", args.out_dir, git_sha):
+            lint_overhead(repeats=1 if args.smoke else 3)
     sys.stdout.flush()
 
 

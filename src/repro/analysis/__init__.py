@@ -4,10 +4,20 @@
 runs the RPL rule catalog; :func:`trace_audit` is the dynamic twin that
 counts jit compilations per callsite.  See the README "Invariant checks"
 section for the rule ↔ invariant map and the suppression grammar.
+
+The dataflow tier lives in submodules: :mod:`repro.analysis.cfg` builds
+intraprocedural control-flow graphs, :mod:`repro.analysis.dataflow` runs
+forward fixpoints over them, :mod:`repro.analysis.taint` is the
+factor-mask taint lattice behind RPL005, and :mod:`repro.analysis.shapes`
+is the abstract shape/dtype interpreter behind RPL009.  SARIF emission /
+baseline diffing (:mod:`repro.analysis.sarif`) and autofix application
+(:mod:`repro.analysis.fixes`) back the ``--format sarif`` / ``--baseline``
+/ ``--fix`` CLI flags.
 """
 from repro.analysis.core import (
     Finding,
     Rule,
+    TextEdit,
     get_rules,
     lint_paths,
     register_rule,
@@ -17,6 +27,7 @@ from repro.analysis.trace_audit import TraceAudit, trace_audit
 __all__ = [
     "Finding",
     "Rule",
+    "TextEdit",
     "TraceAudit",
     "get_rules",
     "lint_paths",

@@ -46,6 +46,20 @@ _SUPPRESS_RE = re.compile(
 
 
 @dataclasses.dataclass(frozen=True)
+class TextEdit:
+    """A mechanical source edit: replace the span [(line, col), (end_line,
+    end_col)) — 1-based lines, 0-based columns, ast coordinates — with
+    ``replacement``.  Carried on :class:`Finding.fix` and applied by
+    ``repro-lint --fix`` (see :mod:`repro.analysis.fixes`)."""
+
+    line: int
+    col: int
+    end_line: int
+    end_col: int
+    replacement: str
+
+
+@dataclasses.dataclass(frozen=True)
 class Finding:
     """One rule violation at one source location."""
 
@@ -56,6 +70,9 @@ class Finding:
     message: str
     severity: str = "error"
     hint: str = ""
+    #: optional mechanical autofix (compare=False: two findings are the
+    #: same violation regardless of whether a fix could be synthesized)
+    fix: Optional[TextEdit] = dataclasses.field(default=None, compare=False)
 
     def render(self, *, show_hint: bool = True) -> str:
         out = f"{self.path}:{self.line}:{self.col + 1}: {self.rule} {self.message}"
@@ -169,15 +186,18 @@ class Rule:
         raise NotImplementedError
 
     def finding(self, mod: ModuleInfo, node: ast.AST, message: str,
-                *, hint: Optional[str] = None) -> Finding:
+                *, hint: Optional[str] = None,
+                severity: Optional[str] = None,
+                fix: Optional[TextEdit] = None) -> Finding:
         return Finding(
             rule=self.id,
             path=mod.path,
             line=getattr(node, "lineno", 0),
             col=getattr(node, "col_offset", 0),
             message=message,
-            severity=self.severity,
+            severity=self.severity if severity is None else severity,
             hint=self.hint if hint is None else hint,
+            fix=fix,
         )
 
 

@@ -1,26 +1,46 @@
-"""The repro-lint rule catalog: RPL001–RPL008.
+"""The repro-lint rule catalog: RPL001–RPL009.
 
 Each rule guards one invariant from the ROADMAP architecture map.  The
 docstring of every rule states the invariant, why it matters for the
 FeDLRT reproduction specifically, and what the sanctioned alternative is
 (which doubles as the autofix hint).
+
+The semantic rules run on the dataflow engine (:mod:`repro.analysis.cfg`
++ :mod:`repro.analysis.dataflow`): RPL005 is a path-sensitive taint
+analysis over the factor-mask lattice, RPL004 propagates traced-ness
+through derived variables, and RPL009 delegates to the static shape
+interpreter in :mod:`repro.analysis.shapes`.
 """
 from __future__ import annotations
 
 import ast
-from typing import Dict, Iterator, Optional, Set
+from typing import Dict, Iterator, List, Optional, Set, Tuple
 
+from repro.analysis.cfg import ATOMIC_DEFS, BranchTest, LoopBind, build_cfg
 from repro.analysis.core import (
     Finding,
     ModuleInfo,
     PathInfo,
     Rule,
+    TextEdit,
     base_chain_attrs,
     call_name,
     is_simple_expr,
     register_rule,
     scope_references,
     walk_with_scope,
+)
+from repro.analysis.dataflow import (
+    FixpointDiverged,
+    ForwardAnalysis,
+    walk_states,
+)
+from repro.analysis.taint import (
+    FRESH,
+    MASKED,
+    FactorTaint,
+    MASK,
+    nonarray_functions,
 )
 
 # ---------------------------------------------------------------------------
@@ -170,6 +190,14 @@ class NoNondeterminism(Rule):
         return not info.under("launch")
 
     def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        # calls appearing directly as sorted(...)'s argument are order-safe
+        # (this is also what --fix produces, so the repair must lint clean)
+        self._sorted_args = {
+            id(arg)
+            for node in ast.walk(mod.tree)
+            if isinstance(node, ast.Call) and call_name(node) == "sorted"
+            for arg in node.args
+        }
         for node in ast.walk(mod.tree):
             if isinstance(node, ast.Call):
                 yield from self._check_call(mod, node)
@@ -204,10 +232,19 @@ class NoNondeterminism(Rule):
                 mod, node, "`default_rng()` without a seed is OS-entropy seeded"
             )
         if parts[-1] == "listdir":
+            if id(node) in self._sorted_args:
+                return
+            fix = None
+            src = ast.get_source_segment(mod.source, node)
+            if src is not None and hasattr(node, "end_lineno"):
+                fix = TextEdit(node.lineno, node.col_offset,
+                               node.end_lineno, node.end_col_offset,
+                               f"sorted({src})")
             yield self.finding(
                 mod, node,
                 "`os.listdir()` order is filesystem-dependent",
                 hint="wrap in sorted(...)",
+                fix=fix,
             )
 
     def _check_loop(self, mod: ModuleInfo, node: ast.For) -> Iterator[Finding]:
@@ -254,16 +291,75 @@ def _jitted_defs(tree: ast.AST) -> Set[str]:
     return jitted
 
 
+def _target_names(target: ast.AST, out: Set[str]) -> None:
+    if isinstance(target, ast.Name):
+        out.add(target.id)
+    elif isinstance(target, (ast.Tuple, ast.List)):
+        for t in target.elts:
+            _target_names(t, out)
+    elif isinstance(target, ast.Starred):
+        _target_names(target.value, out)
+
+
+def _refs_any(expr: ast.AST, names) -> bool:
+    return any(
+        isinstance(n, ast.Name) and n.id in names for n in ast.walk(expr)
+    )
+
+
+class _TracedVars(ForwardAnalysis):
+    """Which locals (transitively) derive from a jitted function's
+    parameters — i.e. are tracers.  State: a frozenset of names; join is
+    union (traced on *any* incoming path is traced)."""
+
+    def __init__(self, params):
+        self.params = frozenset(params)
+
+    def initial(self):
+        return self.params
+
+    def join(self, a, b):
+        return a | b
+
+    def transfer(self, state, stmt):
+        if isinstance(stmt, ast.Assign):
+            names: Set[str] = set()
+            for t in stmt.targets:
+                _target_names(t, names)
+            return (state | names) if _refs_any(stmt.value, state) \
+                else (state - names)
+        if isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            names = set()
+            _target_names(stmt.target, names)
+            return (state | names) if _refs_any(stmt.value, state) \
+                else (state - names)
+        if isinstance(stmt, ast.AugAssign):
+            names = set()
+            _target_names(stmt.target, names)
+            if names & state or _refs_any(stmt.value, state):
+                return state | names
+            return state
+        if isinstance(stmt, LoopBind):
+            names = set()
+            _target_names(stmt.target, names)
+            return (state | names) if _refs_any(stmt.iter, state) \
+                else (state - names)
+        return state
+
+
 @register_rule
 class JitDiscipline(Rule):
     """Traced code must stay traceable: no host ``numpy`` inside traced
-    functions, no Python-side branching on (potentially) traced values.
+    functions, no Python-side branching or side effects on traced values.
 
     ``if x:`` or ``float(x)`` on a tracer raises ``ConcretizationError``
     at best — or silently freezes a data-dependent decision at trace time
     at worst, which is how the adaptive-rank logic would quietly become a
-    constant.  ``core/`` and ``kernels/`` are all-traced by contract, so a
-    module-level ``import numpy`` there is flagged too.
+    constant.  Traced-ness propagates through assignments via dataflow
+    (``y = x * 2; if y:`` is the same bug as ``if x:``), and the CFG walk
+    sees ``while`` tests and branch-only paths too.  ``core/`` and
+    ``kernels/`` are all-traced by contract, so a module-level
+    ``import numpy`` there is flagged as well.
     """
 
     id = "RPL004"
@@ -303,8 +399,6 @@ class JitDiscipline(Rule):
                         "host `numpy` imported in a traced module",
                     )
 
-        # inside statically-known traced defs: numpy calls and Python
-        # branching on parameters (tracers)
         for fn in ast.walk(mod.tree):
             if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
                 continue
@@ -316,6 +410,8 @@ class JitDiscipline(Rule):
                     fn.args.posonlyargs + fn.args.args + fn.args.kwonlyargs
                 )
             }
+            # lexical pass: host numpy anywhere inside the jitted def
+            # (including nested defs/lambdas, which trace with it)
             for node in ast.walk(fn):
                 if isinstance(node, ast.Call):
                     name = call_name(node)
@@ -325,27 +421,65 @@ class JitDiscipline(Rule):
                             f"host call `{name}()` inside jitted "
                             f"`{fn.name}` will run at trace time",
                         )
-                    elif (
-                        name in ("float", "int", "bool")
-                        and node.args
-                        and not isinstance(node.args[0], ast.Constant)
-                        and isinstance(node.args[0], ast.Name)
-                        and node.args[0].id in params
-                    ):
+                    elif name == "print":
                         yield self.finding(
                             mod, node,
-                            f"`{name}()` on traced argument "
-                            f"`{node.args[0].id}` concretizes the tracer",
+                            f"`print()` inside jitted `{fn.name}` runs at "
+                            "trace time only",
+                            hint="use jax.debug.print for runtime output",
                         )
-                elif isinstance(node, ast.If):
-                    t = node.test
-                    if isinstance(t, ast.Name) and t.id in params:
-                        yield self.finding(
-                            mod, node,
-                            f"Python `if {t.id}:` on a traced argument "
-                            f"inside jitted `{fn.name}`",
-                            hint="use jnp.where or lax.cond",
-                        )
+                elif isinstance(node, ast.Global):
+                    yield self.finding(
+                        mod, node,
+                        f"`global` inside jitted `{fn.name}`: mutation is a "
+                        "trace-time side effect",
+                    )
+            # dataflow pass: traced-value propagation through assignments,
+            # then concretization/branching sinks per CFG statement
+            yield from self._traced_sinks(mod, fn, params)
+
+    def _traced_sinks(self, mod: ModuleInfo, fn, params) -> Iterator[Finding]:
+        analysis = _TracedVars(params)
+        try:
+            pairs = list(walk_states(build_cfg(fn), analysis))
+        except (FixpointDiverged, RecursionError):
+            yield self.finding(
+                mod, fn,
+                f"dataflow did not converge analyzing `{fn.name}`",
+                severity="warning",
+            )
+            return
+        for stmt, state in pairs:
+            if isinstance(stmt, BranchTest):
+                t = stmt.node
+                if (
+                    isinstance(t, ast.Name)
+                    and t.id in state
+                    and isinstance(stmt.origin, (ast.If, ast.While))
+                ):
+                    kw = "if" if isinstance(stmt.origin, ast.If) else "while"
+                    yield self.finding(
+                        mod, stmt.origin,
+                        f"Python `{kw} {t.id}:` on a traced value inside "
+                        f"jitted `{fn.name}`",
+                        hint="use jnp.where or lax.cond",
+                    )
+                continue
+            if isinstance(stmt, (LoopBind,) + ATOMIC_DEFS):
+                continue
+            for node in ast.walk(stmt):
+                if (
+                    isinstance(node, ast.Call)
+                    and call_name(node) in ("float", "int", "bool")
+                    and node.args
+                    and isinstance(node.args[0], ast.Name)
+                    and node.args[0].id in state
+                ):
+                    yield self.finding(
+                        mod, node,
+                        f"`{call_name(node)}()` on traced value "
+                        f"`{node.args[0].id}` concretizes the tracer",
+                    )
 
 
 # ---------------------------------------------------------------------------
@@ -360,17 +494,14 @@ MASK_NAMES = {
 FACTOR_LEAVES = {"U", "S", "V"}
 
 
-@register_rule
-class FactorLayoutWrites(Rule):
-    """Writes into factor buffers must re-assert the zero-inactive-columns
-    layout.
+class LegacyFactorLayoutWrites(Rule):
+    """PR 7's *lexical* RPL005: flags a factor write only when no mask
+    name appears anywhere in the enclosing function.
 
-    The whole fixed-width masked-rank design (fused Pallas kernels ≡
-    masked reference, lossless ``topk_rank``, sound async Galerkin
-    transport) rests on U/V columns and S rows/cols beyond ``rank`` being
-    *exactly* zero.  A factor assembled from freshly computed tensors, or
-    an ``.at[...].set`` on a factor leaf, without a mask in scope is how
-    that invariant dies silently.
+    Kept (unregistered) as the comparison baseline for the dataflow rule:
+    it cannot see that a mask was applied on only one branch, applied to
+    the wrong variable, or overwritten before the write —
+    ``tests/test_analysis.py`` demonstrates the miss explicitly.
     """
 
     id = "RPL005"
@@ -417,6 +548,136 @@ class FactorLayoutWrites(Rule):
                         "in-place update of a factor leaf with no "
                         "mask in scope",
                     )
+
+
+@register_rule
+class FactorLayoutWrites(Rule):
+    """Writes into factor buffers must re-assert the zero-inactive-columns
+    layout **on every control-flow path**.
+
+    The whole fixed-width masked-rank design (fused Pallas kernels ≡
+    masked reference, lossless ``topk_rank``, sound async Galerkin
+    transport) rests on U/V columns and S rows/cols beyond ``rank`` being
+    *exactly* zero.  This rule runs the factor-mask taint analysis
+    (:mod:`repro.analysis.taint`) over each function's CFG: factor leaves
+    and sanitizer outputs are MASKED, freshly computed tensors are FRESH,
+    and a write sink (factor constructor kwarg, ``.at[...].set`` on a
+    leaf, attribute store to ``.U/.S/.V``) fires when a FRESH value
+    reaches it on *any* path — so masking only one branch, masking the
+    wrong variable, or reassigning after the mask are all distinguishable
+    from genuinely sanitized writes (which PR 7's lexical check was not).
+    """
+
+    id = "RPL005"
+    title = "factor buffer written without an inactive-column re-mask"
+    severity = "error"
+    hint = (
+        "apply rank_mask/augmented_mask/mask_coeff (or build via "
+        "init_factor) on every path reaching the write"
+    )
+
+    def applies_to(self, info: PathInfo) -> bool:
+        if info.is_tests:
+            return False
+        return bool(info.repro)
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        nonarray = nonarray_functions(mod.tree)
+        scopes: List[Tuple[object, Tuple[str, ...]]] = [(mod.tree, ())]
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                a = node.args
+                params = [
+                    p.arg
+                    for p in a.posonlyargs + a.args + a.kwonlyargs
+                ]
+                for extra in (a.vararg, a.kwarg):
+                    if extra is not None:
+                        params.append(extra.arg)
+                scopes.append((node, tuple(params)))
+        for scope_node, params in scopes:
+            analysis = FactorTaint(params, nonarray)
+            try:
+                pairs = list(walk_states(build_cfg(scope_node), analysis))
+            except (FixpointDiverged, RecursionError) as err:
+                yield self.finding(
+                    mod, scope_node,
+                    f"factor-mask dataflow did not converge: {err}",
+                    severity="warning",
+                )
+                continue
+            for stmt, state in pairs:
+                yield from self._sinks(mod, analysis, stmt, state)
+
+    def _sinks(self, mod: ModuleInfo, analysis: FactorTaint, stmt,
+               state) -> Iterator[Finding]:
+        if isinstance(stmt, ATOMIC_DEFS):
+            return  # nested defs are their own scope
+        if isinstance(stmt, BranchTest):
+            roots: List[ast.AST] = [stmt.node]
+        elif isinstance(stmt, LoopBind):
+            roots = [stmt.iter]
+        else:
+            roots = [stmt]
+        # sink: direct attribute store into a factor leaf
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                if isinstance(t, ast.Attribute) and t.attr in FACTOR_LEAVES:
+                    st, _leaf = analysis.eval(state, stmt.value)
+                    if st == FRESH:
+                        yield self.finding(
+                            mod, stmt,
+                            f"freshly computed value stored into factor "
+                            f"leaf `.{t.attr}` with no dominating mask",
+                        )
+        for root in roots:
+            for call in ast.walk(root):
+                if not isinstance(call, ast.Call):
+                    continue
+                yield from self._call_sinks(mod, analysis, call, state)
+
+    def _call_sinks(self, mod: ModuleInfo, analysis: FactorTaint,
+                    call: ast.Call, state) -> Iterator[Finding]:
+        leaf = call_name(call).rsplit(".", 1)[-1]
+        if leaf in FACTOR_NAMES:
+            for kw in call.keywords:
+                if kw.arg not in FACTOR_LEAVES:
+                    continue
+                st, _ = analysis.eval(state, kw.value)
+                if st == FRESH:
+                    yield self.finding(
+                        mod, call,
+                        f"`{leaf}` built with computed `{kw.arg}=` that no "
+                        "mask dominates on every path to this constructor",
+                        fix=self._mask_fix(mod, state, kw),
+                    )
+        status = analysis.at_set_sink(state, call)
+        if status is not None and status > MASKED:
+            yield self.finding(
+                mod, call,
+                "in-place update writes a value with unproven inactive "
+                "columns into a factor leaf",
+            )
+
+    @staticmethod
+    def _mask_fix(mod: ModuleInfo, state, kw: ast.keyword):
+        """Mechanical re-mask when a live mask variable exists: wrap the
+        kwarg in ``mask_coeff(..., m)`` (S) or ``(...) * m[..., None, :]``
+        (U/V)."""
+        masks = sorted(
+            name for name, (st, _) in state.items() if st == MASK
+        )
+        src = ast.get_source_segment(mod.source, kw.value)
+        if not masks or src is None:
+            return None
+        m = masks[0]
+        if kw.arg == "S":
+            repl = f"mask_coeff({src}, {m})"
+        else:
+            repl = f"(({src}) * {m}[..., None, :])"
+        v = kw.value
+        return TextEdit(v.lineno, v.col_offset, v.end_lineno,
+                        v.end_col_offset, repl)
 
 
 # ---------------------------------------------------------------------------
@@ -653,3 +914,59 @@ class SpecValidationParity(Rule):
                         f"`{cls.name}.{field}` appears in no validation "
                         "rule or build() branch",
                     )
+
+
+# ---------------------------------------------------------------------------
+# RPL009 — kernel-path shape/dtype contracts hold statically
+# ---------------------------------------------------------------------------
+
+
+@register_rule
+class KernelShapeContracts(Rule):
+    """The Pallas kernel path must satisfy the MXU tile contracts for
+    every shape the repo can feed it — proven statically.
+
+    The static shape interpreter (:mod:`repro.analysis.shapes`)
+    symbolically executes ``kernels/ops.py`` over the ModelSpec presets,
+    the shipped example configs, and a synthetic stress grid (including
+    the bf16 ``M % 16 == 8`` case that bit PR 2), checking every
+    ``xus``/``avt``/``atb`` call against the shared constraint table in
+    :mod:`repro.kernels.constraints`: sublane multiples per dtype
+    itemsize, 128-lane multiples, grid divisibility, operand-shape
+    agreement — plus custom-VJP cotangent dtype drift (``_bwd`` must
+    return primal dtypes; mixed-precision cases expose a dropped
+    ``.astype``).  No JAX executes: a padding regression is caught by
+    reading the source, on any machine.
+    """
+
+    id = "RPL009"
+    title = "kernel path violates a tile/shape/dtype contract"
+    severity = "error"
+    hint = (
+        "pad via _round_up/_pad2/_pad_rank using repro.kernels.constraints "
+        "(sublane per dtype itemsize, lane 128) and cast cotangents back "
+        "to the primal dtypes"
+    )
+
+    def applies_to(self, info: PathInfo) -> bool:
+        return info.under("kernels", "ops.py")
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        from repro.analysis.shapes import check_kernel_module
+
+        violations, errors = check_kernel_module(mod.tree)
+        for v in violations:
+            yield Finding(
+                rule=self.id, path=mod.path, line=v.lineno, col=v.col,
+                message=v.message, severity=self.severity, hint=self.hint,
+            )
+        for err in errors:
+            yield Finding(
+                rule=self.id, path=mod.path, line=1, col=0,
+                message=f"static shape interpreter could not evaluate the "
+                        f"kernel path ({err}) — coverage lost, not proven "
+                        f"clean",
+                severity="warning",
+                hint="keep ops.py within the interpreted subset or extend "
+                     "repro.analysis.shapes",
+            )

@@ -1,0 +1,724 @@
+"""Static shape/dtype abstract interpreter for the Pallas kernel path.
+
+Rule RPL009's engine: symbolically executes the *AST* of
+``repro/kernels/ops.py`` — no JAX, no tracing, no device — over a battery
+of concrete shape/dtype cases, and checks every ``xus``/``avt``/``atb``
+call site against the MXU tile constraint table in
+:mod:`repro.kernels.constraints` (sublane multiple per dtype itemsize,
+lane multiple 128, grid divisibility, operand-shape agreement).
+
+Why interpret the real source instead of importing and running it: the
+point is to catch *mutations* of the padding logic (the PR 2 bug class —
+bf16 input with ``M % 16 == 8`` handed to an 8-aligned tile) before any
+test executes, including on machines where the kernels never run.  The
+same pass checks the custom-VJP pair for dtype-promotion drift: ``_bwd``
+must hand back cotangents in the primal dtypes (mixed-precision cases
+make a dropped ``.astype`` visible).
+
+Shape cases come from three sources (:func:`shape_cases`): a synthetic
+grid that always runs (and pins the bf16 ``M % 16 == 8`` stress case), the
+``ModelSpec`` presets, and ``examples/configs/*.toml`` — so the checked
+shapes are the shapes the repo actually trains.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+from repro.kernels.constraints import LANE, sublane
+
+#: interpreter recursion / loop guards
+_MAX_DEPTH = 24
+
+#: dtype attribute names recognized on the ``jnp`` module object
+_DTYPE_NAMES = {
+    "float32", "bfloat16", "float16", "int32", "uint32", "int8", "uint8",
+    "float8_e4m3fn", "float8_e5m2",
+}
+
+#: default tile sizes per sink, mirroring the kernel signatures
+_SINK_DEFAULTS = {
+    "xus": {"bm": 256, "bk": 512},
+    "avt": {"bm": 256, "bn": 256},
+    "atb": {"bm": 512, "bka": 256},
+}
+
+
+class InterpError(Exception):
+    """The interpreter hit a construct it cannot evaluate."""
+
+
+class _Return(Exception):
+    def __init__(self, value):
+        self.value = value
+
+
+class _CaseAbort(Exception):
+    """A reachable ``raise`` aborted this shape case."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Arr:
+    """Abstract array: a concrete shape plus a dtype name."""
+
+    shape: Tuple[int, ...]
+    dtype: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Case:
+    """One concrete activation/factor shape configuration.
+
+    ``dtype`` is the activation (x / dy) dtype, ``fdtype`` the factor
+    (U/S/V) dtype — they differ in mixed-precision cases.
+    """
+
+    label: str
+    M: int
+    K: int
+    N: int
+    R: int
+    dtype: str = "float32"
+    fdtype: str = "float32"
+
+
+@dataclasses.dataclass
+class Violation:
+    """One constraint failure at a specific call site."""
+
+    lineno: int
+    col: int
+    kind: str  # stable key for dedup across cases
+    message: str
+    case: str
+
+
+# ---------------------------------------------------------------------------
+# shape cases
+# ---------------------------------------------------------------------------
+
+#: always-on grid; the bf16 M % 16 == 8 entries pin the PR 2 bug class
+SYNTHETIC_CASES = (
+    Case("f32-tiny", M=8, K=64, N=48, R=4),
+    Case("f32-odd", M=104, K=96, N=80, R=24),
+    Case("bf16-m-mod-16-eq-8", M=104, K=128, N=512, R=32,
+         dtype="bfloat16", fdtype="bfloat16"),
+    Case("bf16-odd-dims", M=40, K=136, N=264, R=24,
+         dtype="bfloat16", fdtype="bfloat16"),
+    Case("bf16-act-f32-factors", M=104, K=128, N=512, R=32,
+         dtype="bfloat16", fdtype="float32"),
+    Case("bf16-llm-block", M=512, K=640, N=2560, R=160,
+         dtype="bfloat16", fdtype="bfloat16"),
+)
+
+
+def _preset_cases() -> List[Case]:
+    """Cases from the ModelSpec presets (guarded: presets may pull heavy
+    imports in minimal environments)."""
+    try:
+        from repro.api.tasks import PRESETS
+    except Exception:
+        return []
+    out: List[Case] = []
+    for name, cfg in sorted(PRESETS.items()):
+        try:
+            lr = cfg.lowrank
+            r = min(lr.r_cap, max(1, int(lr.rank_frac * cfg.d_model)))
+            out.append(Case(
+                f"preset-{name}", M=4 * 128, K=cfg.d_model, N=cfg.d_ff, R=r,
+                dtype=cfg.compute_dtype, fdtype=cfg.param_dtype,
+            ))
+        except Exception:
+            continue
+    return out
+
+
+def _config_cases() -> List[Case]:
+    """Cases from ``examples/configs/*.toml``: the batch geometry each
+    shipped experiment actually feeds the kernels."""
+    try:
+        from repro.api.serialization import toml_loads
+        from repro.api.tasks import PRESETS
+    except Exception:
+        return []
+    root = Path(__file__).resolve()
+    for parent in root.parents:
+        if (parent / "examples" / "configs").is_dir():
+            cfg_dir = parent / "examples" / "configs"
+            break
+    else:
+        return []
+    out: List[Case] = []
+    for path in sorted(cfg_dir.glob("*.toml")):
+        try:
+            data = toml_loads(path.read_text())
+        except Exception:
+            continue
+        model = data.get("model", {})
+        dspec = data.get("data", {})
+        preset = PRESETS.get(model.get("preset", ""))
+        if preset is None:
+            continue
+        m = int(dspec.get("batch", 4)) * int(dspec.get("seq", 128))
+        lr = preset.lowrank
+        r = min(lr.r_cap, max(1, int(lr.rank_frac * preset.d_model)))
+        out.append(Case(
+            f"config-{path.stem}", M=m, K=preset.d_model, N=preset.d_ff,
+            R=r, dtype=preset.compute_dtype, fdtype=preset.param_dtype,
+        ))
+    return out
+
+
+def shape_cases(include_derived: bool = True) -> List[Case]:
+    cases = list(SYNTHETIC_CASES)
+    if include_derived:
+        seen = {(c.M, c.K, c.N, c.R, c.dtype, c.fdtype) for c in cases}
+        for c in _preset_cases() + _config_cases():
+            key = (c.M, c.K, c.N, c.R, c.dtype, c.fdtype)
+            if key not in seen:
+                seen.add(key)
+                cases.append(c)
+    return cases
+
+
+# ---------------------------------------------------------------------------
+# the interpreter
+# ---------------------------------------------------------------------------
+
+
+class ShapeInterp:
+    """Abstract interpreter over one module's AST (``kernels/ops.py``)."""
+
+    def __init__(self, tree: ast.Module):
+        self.tree = tree
+        self.functions: Dict[str, ast.FunctionDef] = {
+            n.name: n for n in tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        }
+        self.violations: List[Violation] = []
+        self.case = ""
+
+    # -- public entry points ----------------------------------------------
+
+    def run_case(self, case: Case) -> None:
+        """Interpret every kernel entry point for one shape case,
+        accumulating violations (never raising for constraint failures)."""
+        self.case = case.label
+        x = Arr((case.M, case.K), case.dtype)
+        U = Arr((case.K, case.R), case.fdtype)
+        S = Arr((case.R, case.R), case.fdtype)
+        V = Arr((case.N, case.R), case.fdtype)
+        dy = Arr((case.M, case.N), case.dtype)
+
+        y = self._entry("lowrank_apply_kernels", [x, U, S, V],
+                        {"interpret": False})
+        if isinstance(y, Arr):
+            if y.shape != (case.M, case.N):
+                self._flag(self.functions["lowrank_apply_kernels"],
+                           "fwd-shape",
+                           f"forward output shape {y.shape}, expected "
+                           f"{(case.M, case.N)}")
+            if y.dtype != case.dtype:
+                self._flag(self.functions["lowrank_apply_kernels"],
+                           "fwd-dtype",
+                           f"forward output dtype {y.dtype} drifts from "
+                           f"activation dtype {case.dtype}")
+
+        g = self._entry("coeff_grad_kernels", [x, dy, U, V],
+                        {"interpret": False})
+        if isinstance(g, Arr) and g.shape != (case.R, case.R):
+            self._flag(self.functions["coeff_grad_kernels"], "coeff-shape",
+                       f"coefficient gradient shape {g.shape}, expected "
+                       f"{(case.R, case.R)}")
+
+        outs = self._entry("_bwd", [True, (x, U, S, V), dy], {})
+        if isinstance(outs, tuple) and len(outs) == 4:
+            names = ("dx", "dU", "dS", "dV")
+            primals = (x, U, S, V)
+            for nm, out, prim in zip(names, outs, primals):
+                if not isinstance(out, Arr):
+                    continue
+                if out.dtype != prim.dtype:
+                    self._flag(
+                        self.functions["_bwd"], f"bwd-dtype-{nm}",
+                        f"custom-VJP cotangent {nm} has dtype {out.dtype} "
+                        f"but the primal is {prim.dtype} — dtype promotion "
+                        f"leaks out of the backward pass")
+                if out.shape != prim.shape:
+                    self._flag(
+                        self.functions["_bwd"], f"bwd-shape-{nm}",
+                        f"cotangent {nm} shape {out.shape} != primal "
+                        f"{prim.shape}")
+
+    def _entry(self, name: str, args: list, kwargs: dict):
+        fn = self.functions.get(name)
+        if fn is None:
+            raise InterpError(f"entry point {name}() not found in module")
+        try:
+            return self._call_def(fn, args, kwargs, depth=0)
+        except _CaseAbort:
+            return None
+
+    def _flag(self, node, kind: str, message: str) -> None:
+        self.violations.append(Violation(
+            lineno=getattr(node, "lineno", 1),
+            col=getattr(node, "col_offset", 0),
+            kind=kind, message=message, case=self.case,
+        ))
+
+    # -- function application ---------------------------------------------
+
+    def _call_def(self, fn: ast.FunctionDef, args: list, kwargs: dict,
+                  depth: int):
+        if depth > _MAX_DEPTH:
+            raise InterpError(f"recursion depth exceeded in {fn.name}()")
+        env: Dict[str, object] = {}
+        a = fn.args
+        pos = list(a.args)
+        # positional (ops.py uses no *args/**kwargs in the kernel path)
+        for i, arg in enumerate(args):
+            if i < len(pos):
+                env[pos[i].arg] = arg
+            else:
+                raise InterpError(f"too many positional args to {fn.name}()")
+        # positional defaults
+        for arg_node, default in zip(pos[len(pos) - len(a.defaults):],
+                                     a.defaults):
+            if arg_node.arg not in env:
+                env[arg_node.arg] = self._eval(default, env, depth)
+        # keyword-only (+ defaults)
+        for arg_node, default in zip(a.kwonlyargs, a.kw_defaults):
+            if arg_node.arg in kwargs:
+                env[arg_node.arg] = kwargs[arg_node.arg]
+            elif default is not None:
+                env[arg_node.arg] = self._eval(default, env, depth)
+        for k, v in kwargs.items():
+            env[k] = v
+        for arg_node in pos + a.kwonlyargs:
+            if arg_node.arg not in env:
+                raise InterpError(
+                    f"missing argument {arg_node.arg!r} to {fn.name}()")
+        try:
+            self._exec_block(fn.body, env, depth)
+        except _Return as r:
+            return r.value
+        return None
+
+    # -- statements --------------------------------------------------------
+
+    def _exec_block(self, stmts, env, depth) -> None:
+        for s in stmts:
+            self._exec(s, env, depth)
+
+    def _exec(self, s: ast.stmt, env, depth) -> None:
+        if isinstance(s, ast.Return):
+            raise _Return(
+                None if s.value is None else self._eval(s.value, env, depth))
+        if isinstance(s, ast.Assign):
+            val = self._eval(s.value, env, depth)
+            for t in s.targets:
+                self._bind(t, val, env)
+            return
+        if isinstance(s, ast.AnnAssign) and s.value is not None:
+            self._bind(s.target, self._eval(s.value, env, depth), env)
+            return
+        if isinstance(s, ast.AugAssign):
+            cur = self._eval(ast.copy_location(
+                ast.Name(id=s.target.id, ctx=ast.Load()), s), env, depth) \
+                if isinstance(s.target, ast.Name) else None
+            if cur is None:
+                raise InterpError("unsupported augmented assignment target")
+            val = self._binop_val(s.op, cur,
+                                  self._eval(s.value, env, depth), s)
+            env[s.target.id] = val
+            return
+        if isinstance(s, ast.If):
+            test = self._eval(s.test, env, depth)
+            self._exec_block(s.body if test else s.orelse, env, depth)
+            return
+        if isinstance(s, ast.Assert):
+            ok = self._eval(s.test, env, depth)
+            if not ok:
+                self._flag(s, f"assert-L{s.lineno}",
+                           f"assertion fails statically: "
+                           f"{ast.unparse(s.test)}")
+            return
+        if isinstance(s, ast.Raise):
+            self._flag(s, f"raise-L{s.lineno}",
+                       "reachable raise on the kernel path: "
+                       + (ast.unparse(s.exc) if s.exc else "re-raise"))
+            raise _CaseAbort()
+        if isinstance(s, ast.Expr):
+            self._eval(s.value, env, depth)
+            return
+        if isinstance(s, (ast.Pass, ast.Import, ast.ImportFrom)):
+            return
+        raise InterpError(
+            f"unsupported statement {type(s).__name__} at line "
+            f"{getattr(s, 'lineno', '?')}")
+
+    def _bind(self, target, val, env) -> None:
+        if isinstance(target, ast.Name):
+            env[target.id] = val
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            if not isinstance(val, tuple) or len(val) != len(target.elts):
+                raise InterpError("tuple unpacking arity mismatch")
+            for t, v in zip(target.elts, val):
+                self._bind(t, v, env)
+        else:
+            raise InterpError(
+                f"unsupported assignment target {type(target).__name__}")
+
+    # -- expressions -------------------------------------------------------
+
+    def _eval(self, e: ast.expr, env, depth):
+        if isinstance(e, ast.Constant):
+            return e.value
+        if isinstance(e, ast.Name):
+            if e.id in env:
+                return env[e.id]
+            if e.id == "LANE":
+                return LANE
+            if e.id in ("jnp", "jax", "ref", "functools", "pl", "pltpu"):
+                return ("module", e.id)
+            if e.id in self.functions:
+                return ("def", e.id)
+            if e.id in ("True", "False", "None"):  # pre-3.8 safety
+                return {"True": True, "False": False, "None": None}[e.id]
+            if e.id in ("min", "max", "len", "abs", "int"):
+                return ("builtin", e.id)
+            # imported kernel entry points and helpers
+            if e.id in ("xus", "avt", "atb", "_sublane", "_min_sublane"):
+                return ("intercept", e.id)
+            raise InterpError(f"unknown name {e.id!r} at line {e.lineno}")
+        if isinstance(e, ast.Tuple):
+            return tuple(self._eval(v, env, depth) for v in e.elts)
+        if isinstance(e, ast.Attribute):
+            return self._attribute(e, env, depth)
+        if isinstance(e, ast.Subscript):
+            return self._subscript(e, env, depth)
+        if isinstance(e, ast.BinOp):
+            return self._binop_val(
+                e.op, self._eval(e.left, env, depth),
+                self._eval(e.right, env, depth), e)
+        if isinstance(e, ast.UnaryOp):
+            v = self._eval(e.operand, env, depth)
+            if isinstance(e.op, ast.USub):
+                return -v
+            if isinstance(e.op, ast.Not):
+                return not v
+            if isinstance(e.op, ast.UAdd):
+                return +v
+            raise InterpError("unsupported unary op")
+        if isinstance(e, ast.BoolOp):
+            if isinstance(e.op, ast.And):
+                v = True
+                for sub in e.values:
+                    v = self._eval(sub, env, depth)
+                    if not v:
+                        return v
+                return v
+            v = False
+            for sub in e.values:
+                v = self._eval(sub, env, depth)
+                if v:
+                    return v
+            return v
+        if isinstance(e, ast.Compare):
+            left = self._eval(e.left, env, depth)
+            for op, rhs_node in zip(e.ops, e.comparators):
+                rhs = self._eval(rhs_node, env, depth)
+                ok = self._compare(op, left, rhs)
+                if not ok:
+                    return False
+                left = rhs
+            return True
+        if isinstance(e, ast.IfExp):
+            return (self._eval(e.body, env, depth)
+                    if self._eval(e.test, env, depth)
+                    else self._eval(e.orelse, env, depth))
+        if isinstance(e, ast.Call):
+            return self._call(e, env, depth)
+        raise InterpError(
+            f"unsupported expression {type(e).__name__} at line "
+            f"{getattr(e, 'lineno', '?')}")
+
+    @staticmethod
+    def _compare(op, a, b):
+        if isinstance(op, ast.Eq):
+            return a == b
+        if isinstance(op, ast.NotEq):
+            return a != b
+        if isinstance(op, ast.Lt):
+            return a < b
+        if isinstance(op, ast.LtE):
+            return a <= b
+        if isinstance(op, ast.Gt):
+            return a > b
+        if isinstance(op, ast.GtE):
+            return a >= b
+        if isinstance(op, ast.Is):
+            return a is b
+        if isinstance(op, ast.IsNot):
+            return a is not b
+        raise InterpError("unsupported comparison")
+
+    def _binop_val(self, op, left, right, node):
+        try:
+            if isinstance(op, ast.Add):
+                return left + right
+            if isinstance(op, ast.Sub):
+                return left - right
+            if isinstance(op, ast.Mult):
+                return left * right
+            if isinstance(op, ast.FloorDiv):
+                return left // right
+            if isinstance(op, ast.Mod):
+                return left % right
+            if isinstance(op, ast.Pow):
+                return left ** right
+        except TypeError:
+            raise InterpError(
+                f"arithmetic on abstract values at line "
+                f"{getattr(node, 'lineno', '?')}")
+        raise InterpError("unsupported binary operator")
+
+    def _attribute(self, e: ast.Attribute, env, depth):
+        val = self._eval(e.value, env, depth)
+        if isinstance(val, Arr):
+            if e.attr == "shape":
+                return val.shape
+            if e.attr == "dtype":
+                return val.dtype
+            if e.attr == "T":
+                return Arr(tuple(reversed(val.shape)), val.dtype)
+            if e.attr == "astype":
+                return ("astype", val)
+            raise InterpError(f"unknown array attribute .{e.attr}")
+        if val == ("module", "jnp"):
+            if e.attr in _DTYPE_NAMES:
+                return e.attr
+            return ("jnp", e.attr)
+        if isinstance(val, tuple) and len(val) == 2 and val[0] == "module":
+            return (val[1], e.attr)
+        raise InterpError(f"unsupported attribute .{e.attr}")
+
+    def _subscript(self, e: ast.Subscript, env, depth):
+        base = self._eval(e.value, env, depth)
+        idx = e.slice
+        if isinstance(base, tuple):
+            i = self._eval(idx, env, depth)
+            if not isinstance(i, int):
+                raise InterpError("non-integer tuple index")
+            return base[i]
+        if isinstance(base, Arr):
+            parts = list(idx.elts) if isinstance(idx, ast.Tuple) else [idx]
+            shape: List[int] = []
+            for dim, part in enumerate(parts):
+                size = base.shape[dim]
+                if isinstance(part, ast.Slice):
+                    if part.step is not None:
+                        raise InterpError("strided slice unsupported")
+                    lo = 0 if part.lower is None else self._eval(
+                        part.lower, env, depth)
+                    hi = size if part.upper is None else self._eval(
+                        part.upper, env, depth)
+                    if lo < 0:
+                        lo += size
+                    if hi < 0:
+                        hi += size
+                    shape.append(max(0, min(hi, size) - lo))
+                else:  # integer index: dim dropped
+                    self._eval(part, env, depth)
+            shape.extend(base.shape[len(parts):])
+            return Arr(tuple(shape), base.dtype)
+        raise InterpError("unsupported subscript base")
+
+    # -- calls -------------------------------------------------------------
+
+    def _call(self, e: ast.Call, env, depth):
+        fn = self._eval(e.func, env, depth)
+        args = [self._eval(a, env, depth) for a in e.args]
+        kwargs = {kw.arg: self._eval(kw.value, env, depth)
+                  for kw in e.keywords if kw.arg is not None}
+
+        if isinstance(fn, tuple) and fn and fn[0] == "def":
+            return self._call_def(self.functions[fn[1]], args, kwargs,
+                                  depth + 1)
+        if isinstance(fn, tuple) and fn and fn[0] == "builtin":
+            return {"min": min, "max": max, "len": len, "abs": abs,
+                    "int": int}[fn[1]](*args)
+        if isinstance(fn, tuple) and fn and fn[0] == "astype":
+            arr = fn[1]
+            if not isinstance(args[0], str):
+                raise InterpError("astype with non-dtype argument")
+            return Arr(arr.shape, args[0])
+        if isinstance(fn, tuple) and fn and fn[0] == "intercept":
+            return self._intercept(fn[1], e, args, kwargs)
+        if isinstance(fn, tuple) and fn and fn[0] == "jnp":
+            return self._jnp(fn[1], e, args, kwargs)
+        if fn == ("jax", "default_backend"):
+            return "tpu"  # model the compiled path: constraints active
+        if fn == ("ref", "lowrank_matmul_ref"):
+            x, U, S, V = args[:4]
+            return Arr((x.shape[0], V.shape[0]), x.dtype)
+        if isinstance(fn, tuple) and len(fn) == 2 and fn[1] == "partial":
+            raise InterpError("functools.partial on the interpreted path")
+        # module-level helpers referenced by bare name resolve via _eval;
+        # on_tpu() lands here as ("def", ...) already
+        raise InterpError(
+            f"uninterpretable call at line {e.lineno}: {ast.unparse(e.func)}")
+
+    def _jnp(self, name: str, e: ast.Call, args, kwargs):
+        if name == "pad":
+            x, pads = args[0], args[1]
+            shape = tuple(
+                d + int(lo) + int(hi) for d, (lo, hi) in zip(x.shape, pads))
+            return Arr(shape, x.dtype)
+        if name == "zeros":
+            shape = args[0]
+            if isinstance(shape, int):
+                shape = (shape,)
+            dtype = kwargs.get("dtype", args[1] if len(args) > 1 else
+                               "float32")
+            return Arr(tuple(int(d) for d in shape), dtype)
+        if name == "zeros_like":
+            return args[0]
+        if name == "eye":
+            n = int(args[0])
+            dtype = kwargs.get("dtype", "float32")
+            return Arr((n, n), dtype)
+        if name == "transpose":
+            x = args[0]
+            return Arr(tuple(reversed(x.shape)), x.dtype)
+        raise InterpError(f"unmodeled jnp.{name} at line {e.lineno}")
+
+    # -- kernel sinks ------------------------------------------------------
+
+    def _intercept(self, name: str, e: ast.Call, args, kwargs):
+        if name in ("_sublane", "_min_sublane"):
+            if not isinstance(args[0], str):
+                raise InterpError("_sublane on a non-dtype value")
+            return sublane(args[0])
+        if name == "xus":
+            return self._sink_xus(e, args, kwargs)
+        if name == "avt":
+            return self._sink_avt(e, args, kwargs)
+        if name == "atb":
+            return self._sink_atb(e, args, kwargs)
+        raise InterpError(f"unknown intercept {name}")
+
+    def _tile(self, e, name: str, size: int, mult: int, kind: str,
+              dtype: str) -> None:
+        if size % mult:
+            self._flag(
+                e, f"tile-{name}-L{e.lineno}",
+                f"{name}={size} is not a multiple of {mult} ({kind} dim, "
+                f"dtype {dtype}) at the compiled-kernel call")
+
+    def _grid(self, e, dim_name: str, dim: int, tile_name: str,
+              tile: int) -> None:
+        if tile == 0 or dim % tile:
+            self._flag(
+                e, f"grid-{dim_name}-L{e.lineno}",
+                f"{dim_name}={dim} does not tile evenly by "
+                f"{tile_name}={tile} — the kernel grid truncates")
+
+    def _sink_xus(self, e, args, kwargs):
+        x, U, S = args[0], args[1], args[2]
+        bm = kwargs.get("bm", _SINK_DEFAULTS["xus"]["bm"])
+        bk = kwargs.get("bk", _SINK_DEFAULTS["xus"]["bk"])
+        M, K = x.shape
+        R = U.shape[1]
+        bm, bk = min(bm, M), min(bk, K)
+        sub = sublane(x.dtype)
+        self._grid(e, "M", M, "bm", bm)
+        self._grid(e, "K", K, "bk", bk)
+        self._tile(e, "bm", bm, sub, "sublane", x.dtype)
+        self._tile(e, "bk", bk, LANE, "lane", x.dtype)
+        self._tile(e, "R", R, LANE, "lane", x.dtype)
+        if U.shape[0] != K:
+            self._flag(e, f"shape-xU-L{e.lineno}",
+                       f"x is (…, {K}) but U is ({U.shape[0]}, …)")
+        if S.shape != (R, R):
+            self._flag(e, f"shape-S-L{e.lineno}",
+                       f"S is {S.shape}, expected {(R, R)} — rank padding "
+                       f"out of step between U and S")
+        return Arr((M, R), x.dtype)
+
+    def _sink_avt(self, e, args, kwargs):
+        A, V = args[0], args[1]
+        bm = kwargs.get("bm", _SINK_DEFAULTS["avt"]["bm"])
+        bn = kwargs.get("bn", _SINK_DEFAULTS["avt"]["bn"])
+        M, R = A.shape
+        N = V.shape[0]
+        bm, bn = min(bm, M), min(bn, N)
+        sub = sublane(A.dtype)
+        self._grid(e, "M", M, "bm", bm)
+        self._grid(e, "N", N, "bn", bn)
+        self._tile(e, "bm", bm, sub, "sublane", A.dtype)
+        self._tile(e, "bn", bn, LANE, "lane", A.dtype)
+        self._tile(e, "R", R, LANE, "lane", A.dtype)
+        if V.shape[1] != R:
+            self._flag(e, f"shape-AV-L{e.lineno}",
+                       f"A is (…, {R}) but V is (…, {V.shape[1]})")
+        return Arr((M, N), A.dtype)
+
+    def _sink_atb(self, e, args, kwargs):
+        A, B = args[0], args[1]
+        bm = kwargs.get("bm", _SINK_DEFAULTS["atb"]["bm"])
+        bka = kwargs.get("bka", _SINK_DEFAULTS["atb"]["bka"])
+        M, Ka = A.shape
+        Kb = B.shape[1]
+        bm, bka = min(bm, M), min(bka, Ka)
+        sub = sublane(A.dtype)
+        self._grid(e, "M", M, "bm", bm)
+        self._grid(e, "Ka", Ka, "bka", bka)
+        self._tile(e, "bm", bm, sub, "sublane", A.dtype)
+        self._tile(e, "bka", bka, LANE, "lane", A.dtype)
+        self._tile(e, "Kb", Kb, LANE, "lane", A.dtype)
+        if B.shape[0] != M:
+            self._flag(e, f"shape-AB-L{e.lineno}",
+                       f"A has {M} rows but B has {B.shape[0]} — the "
+                       f"shared reduction dim disagrees")
+        return Arr((Ka, Kb), A.dtype)
+
+
+def check_kernel_module(tree: ast.Module,
+                        cases: Optional[List[Case]] = None
+                        ) -> Tuple[List[Violation], List[str]]:
+    """Run every shape case against a kernels/ops module AST.
+
+    Returns ``(violations, errors)``: constraint violations deduped by
+    site+kind (with the witnessing cases folded into the message), and
+    interpreter errors (unsupported constructs — reported as warnings so
+    a refactor that breaks the interpreter is visible, not silent).
+    """
+    interp = ShapeInterp(tree)
+    errors: List[str] = []
+    for case in cases if cases is not None else shape_cases():
+        try:
+            interp.run_case(case)
+        except InterpError as err:
+            errors.append(f"[{case.label}] {err}")
+    # dedupe across cases: one finding per (site, kind)
+    by_key: Dict[Tuple[int, str], Violation] = {}
+    witnesses: Dict[Tuple[int, str], List[str]] = {}
+    for v in interp.violations:
+        key = (v.lineno, v.kind)
+        if key not in by_key:
+            by_key[key] = v
+            witnesses[key] = []
+        if v.case not in witnesses[key]:
+            witnesses[key].append(v.case)
+    out: List[Violation] = []
+    for key, v in sorted(by_key.items()):
+        cases_str = ", ".join(witnesses[key][:3])
+        extra = len(witnesses[key]) - 3
+        if extra > 0:
+            cases_str += f", +{extra} more"
+        out.append(dataclasses.replace(
+            v, message=f"{v.message} [cases: {cases_str}]"))
+    return out, sorted(set(errors))

@@ -1,0 +1,356 @@
+"""Factor-mask taint domain: the dataflow ground for rule RPL005.
+
+The zero-inactive-columns invariant (ROADMAP architecture map) demands
+that every tensor *written into* a factor buffer has exactly-zero
+inactive columns.  PR 7 checked this lexically ("a mask name is
+referenced somewhere in the enclosing function"), which is both unsound
+(mask applied on only one branch, or to the wrong variable) and noisy
+(clean plumbing needed suppressions).  This module gives each variable a
+mask *status* and pushes it through the CFG with
+:mod:`repro.analysis.dataflow`, so the rule can ask the real question:
+is the written value sanitizer-dominated on **every** path to the write?
+
+Status lattice (a total order by badness; join takes the worst):
+
+- ``MASK``   — the value *is* an inactive-column mask
+  (``rank_mask``/``augmented_mask``/... output, or an ``arange``-vs-rank
+  comparison).
+- ``MASKED`` — a tensor whose inactive columns are provably zero here:
+  sanitizer output, a factor-leaf read (``f.U`` — inductively invariant),
+  an all-zeros buffer, or anything multiplied by a MASK/MASKED value
+  (elementwise zero absorbs).
+- ``CLEAN``  — an existing value moved verbatim (parameter, subscript,
+  ``asarray``) or a known non-array (PartitionSpec templates): fine to
+  *re-wrap* into a factor, but not proof that a computed write is masked.
+- ``FRESH``  — computed with no dominating sanitizer: the taint.
+
+Sinks (checked by the rule, not here): factor-constructor kwargs must
+not be FRESH; ``.at[...].set`` on a factor leaf requires MASK/MASKED.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Optional, Set, Tuple
+
+from repro.analysis.cfg import BranchTest, LoopBind
+from repro.analysis.dataflow import ForwardAnalysis
+
+# badness-ordered statuses (join = max)
+MASK, MASKED, CLEAN, FRESH = 0, 1, 2, 3
+STATUS_NAMES = {MASK: "mask", MASKED: "masked", CLEAN: "clean", FRESH: "fresh"}
+
+#: a variable's abstract value: (status, aliases-a-factor-leaf)
+Val = Tuple[int, bool]
+
+FACTOR_LEAVES = {"U", "S", "V"}
+FACTOR_CTORS = {"LowRankFactor", "AugmentedFactor"}
+
+#: calls producing a mask
+MASK_MAKERS = {"rank_mask", "augmented_mask", "coeff_grad_mask"}
+#: calls whose output satisfies the invariant by construction
+SANITIZERS = {"mask_coeff", "init_factor", "zero_inactive", "check_invariants"}
+#: all-zero constructors (vacuously invariant)
+ZERO_MAKERS = {"zeros", "zeros_like"}
+#: identity movers: output is the input, bit for bit
+MOVERS = {"asarray", "array", "device_get", "device_put", "stop_gradient"}
+#: constructors of non-tensor values (sharding templates etc.)
+NONARRAY_CTORS = {
+    "P", "PartitionSpec", "NamedSharding", "Mesh", "ShapeDtypeStruct",
+}
+#: method calls that return their receiver's data unchanged (modulo
+#: dtype/layout), so its status carries over
+PRESERVING_METHODS = {"astype", "reshape", "copy", "conj", "block_until_ready"}
+
+
+def call_leaf(node: ast.Call) -> str:
+    """Last dotted component of the callee (``a.b.c(...)`` → ``c``)."""
+    f = node.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return ""
+
+
+def nonarray_functions(tree: ast.AST) -> Set[str]:
+    """Module-level defs whose every ``return`` is a known non-array
+    (PartitionSpec-like constructor or constant) — calls to them are CLEAN.
+    """
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        returns = [
+            n for n in ast.walk(node) if isinstance(n, ast.Return)
+        ]
+        if not returns:
+            continue
+
+        def nonarray(e: Optional[ast.expr]) -> bool:
+            if e is None or isinstance(e, ast.Constant):
+                return True
+            return isinstance(e, ast.Call) and call_leaf(e) in NONARRAY_CTORS
+
+        if all(nonarray(r.value) for r in returns):
+            out.add(node.name)
+    return out
+
+
+def _has_arange(node: ast.AST) -> bool:
+    return any(
+        isinstance(n, ast.Call) and call_leaf(n) == "arange"
+        for n in ast.walk(node)
+    )
+
+
+class FactorTaint(ForwardAnalysis):
+    """Per-variable mask-status analysis for one scope (function/module).
+
+    ``params`` are the scope's bindings on entry; factor-leaf names
+    (``U``/``S``/``V``) enter as MASKED leaves (the invariant holds
+    inductively at function boundaries), everything else as CLEAN.
+    """
+
+    def __init__(self, params: Tuple[str, ...] = (),
+                 nonarray_funcs: Optional[Set[str]] = None):
+        self.params = tuple(params)
+        self.nonarray_funcs = nonarray_funcs or set()
+
+    # -- lattice ----------------------------------------------------------
+
+    def initial(self) -> Dict[str, Val]:
+        state: Dict[str, Val] = {}
+        for p in self.params:
+            if p in FACTOR_LEAVES:
+                state[p] = (MASKED, True)
+            else:
+                state[p] = (CLEAN, False)
+        return state
+
+    def join(self, a: Dict[str, Val], b: Dict[str, Val]) -> Dict[str, Val]:
+        out = dict(a)
+        for k, (st, leaf) in b.items():
+            if k in out:
+                st0, leaf0 = out[k]
+                out[k] = (max(st0, st), leaf0 or leaf)
+            else:
+                out[k] = (st, leaf)
+        return out
+
+    # -- expressions -------------------------------------------------------
+
+    def eval(self, state: Dict[str, Val], e: ast.AST) -> Val:
+        """Abstract value of an expression in ``state``."""
+        if isinstance(e, ast.Constant):
+            return (CLEAN, False)
+        if isinstance(e, ast.Name):
+            if e.id in state:
+                return state[e.id]
+            if e.id in FACTOR_LEAVES:
+                return (MASKED, True)
+            return (CLEAN, False)
+        if isinstance(e, ast.Attribute):
+            if e.attr in FACTOR_LEAVES:
+                return (MASKED, True)
+            if e.attr in ("T", "mT", "at"):
+                return self.eval(state, e.value)
+            return (CLEAN, False)
+        if isinstance(e, ast.Subscript):
+            return self.eval(state, e.value)
+        if isinstance(e, ast.Starred):
+            return self.eval(state, e.value)
+        if isinstance(e, ast.UnaryOp):
+            return self.eval(state, e.operand)
+        if isinstance(e, ast.BinOp):
+            return self._binop(state, e)
+        if isinstance(e, ast.BoolOp):
+            vals = [self.eval(state, v) for v in e.values]
+            st = max(v[0] for v in vals)
+            return (st, False)
+        if isinstance(e, ast.Compare):
+            # arange-vs-rank comparisons build masks
+            if _has_arange(e):
+                return (MASK, False)
+            return (CLEAN, False)
+        if isinstance(e, ast.IfExp):
+            b = self.eval(state, e.body)
+            o = self.eval(state, e.orelse)
+            return (max(b[0], o[0]), b[1] or o[1])
+        if isinstance(e, ast.Call):
+            return self._call(state, e)
+        if isinstance(e, (ast.Tuple, ast.List)):
+            if not e.elts:
+                return (CLEAN, False)
+            vals = [self.eval(state, v) for v in e.elts]
+            return (max(v[0] for v in vals), any(v[1] for v in vals))
+        if isinstance(e, (ast.ListComp, ast.SetComp, ast.GeneratorExp)):
+            return self.eval(state, e.elt)
+        if isinstance(e, ast.DictComp):
+            return self.eval(state, e.value)
+        if isinstance(e, ast.Await):
+            return self.eval(state, e.value)
+        if isinstance(e, ast.NamedExpr):
+            return self.eval(state, e.value)
+        # Lambda, Dict, JoinedStr, Slice, comparators...
+        return (CLEAN, False)
+
+    def _binop(self, state: Dict[str, Val], e: ast.BinOp) -> Val:
+        l = self.eval(state, e.left)
+        r = self.eval(state, e.right)
+        if isinstance(e.op, ast.Mult):
+            # elementwise product: zeros absorb — one masked side suffices
+            if l[0] <= MASKED or r[0] <= MASKED:
+                return (MASKED, False)
+            return (FRESH, False)
+        if isinstance(e.op, (ast.BitOr, ast.BitAnd, ast.BitXor)):
+            if l[0] == MASK and r[0] == MASK:
+                return (MASK, False)
+            return (max(l[0], r[0], MASKED), False)
+        if isinstance(e.op, (ast.Add, ast.Sub)):
+            # zeros + zeros stays zero; anything else can repopulate them
+            if l[0] <= MASKED and r[0] <= MASKED:
+                return (MASKED, False)
+            return (FRESH, False)
+        if isinstance(e.op, (ast.Div, ast.FloorDiv, ast.Mod)):
+            # 0 / x == 0: the left side's zero columns survive
+            if l[0] <= MASKED:
+                return (MASKED, False)
+            return (FRESH, False)
+        # MatMult, Pow, shifts: computed afresh
+        return (FRESH, False)
+
+    def _call(self, state: Dict[str, Val], e: ast.Call) -> Val:
+        leaf = call_leaf(e)
+        if leaf in MASK_MAKERS:
+            return (MASK, False)
+        if leaf in SANITIZERS:
+            return (MASKED, False)
+        if leaf in ZERO_MAKERS:
+            return (MASKED, False)
+        if leaf in FACTOR_CTORS:
+            # a constructed factor: its kwargs are themselves sink-checked
+            return (MASKED, False)
+        if leaf in NONARRAY_CTORS or leaf in self.nonarray_funcs:
+            return (CLEAN, False)
+        if leaf in MOVERS and e.args:
+            return self.eval(state, e.args[0])
+        if isinstance(e.func, ast.Attribute):
+            recv = e.func.value
+            if leaf in PRESERVING_METHODS:
+                return self.eval(state, recv)
+            if leaf in ("set", "add") and self._is_at_chain(recv):
+                # buffer.at[...].set(v): worst of buffer and written value
+                base = self.eval(state, self._at_base(recv))
+                val = self.eval(state, e.args[0]) if e.args else (CLEAN, False)
+                st = max(base[0], val[0], MASKED)  # never upgrade to MASK
+                return (st, base[1])
+        # unknown call: masked inputs propagate (diag/concat/qr of a
+        # masked tensor stays column-masked in this codebase's idioms);
+        # otherwise the result is freshly computed
+        arg_vals = [self.eval(state, a) for a in e.args]
+        arg_vals += [self.eval(state, kw.value) for kw in e.keywords]
+        if any(v[0] <= MASKED for v in arg_vals):
+            return (MASKED, False)
+        return (FRESH, False)
+
+    # -- .at[...] chains ---------------------------------------------------
+
+    @staticmethod
+    def _is_at_chain(node: ast.AST) -> bool:
+        """True for ``<base>.at[...]`` expressions."""
+        return (
+            isinstance(node, ast.Subscript)
+            and isinstance(node.value, ast.Attribute)
+            and node.value.attr == "at"
+        )
+
+    @staticmethod
+    def _at_base(node: ast.AST) -> ast.AST:
+        """The buffer underneath ``<base>.at[...]``."""
+        assert isinstance(node, ast.Subscript)
+        assert isinstance(node.value, ast.Attribute)
+        return node.value.value
+
+    def at_set_sink(self, state: Dict[str, Val], call: ast.Call):
+        """If ``call`` is ``<factor leaf>.at[...].set/add(v)``, return the
+        written value's status, else None."""
+        if not (
+            isinstance(call.func, ast.Attribute)
+            and call.func.attr in ("set", "add")
+            and self._is_at_chain(call.func.value)
+        ):
+            return None
+        base = self._at_base(call.func.value)
+        if not self.eval(state, base)[1]:  # not a factor leaf
+            return None
+        if not call.args:
+            return None
+        return self.eval(state, call.args[0])[0]
+
+    # -- transfer ----------------------------------------------------------
+
+    def transfer(self, state: Dict[str, Val], stmt) -> Dict[str, Val]:
+        if isinstance(stmt, BranchTest):
+            return state
+        if isinstance(stmt, LoopBind):
+            out = dict(state)
+            self._bind(out, stmt.target, (CLEAN, False))
+            return out
+        if isinstance(stmt, ast.Assign):
+            out = dict(state)
+            val = self.eval(state, stmt.value)
+            for t in stmt.targets:
+                self._assign(out, t, stmt.value, val)
+            return out
+        if isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            out = dict(state)
+            self._assign(out, stmt.target, stmt.value,
+                         self.eval(state, stmt.value))
+            return out
+        if isinstance(stmt, ast.AugAssign):
+            out = dict(state)
+            synth = ast.BinOp(left=stmt.target, op=stmt.op, right=stmt.value)
+            val = self.eval(state, synth)
+            if isinstance(stmt.target, ast.Name):
+                out[stmt.target.id] = val
+            return out
+        if isinstance(
+            stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+        ):
+            out = dict(state)
+            out[stmt.name] = (CLEAN, False)
+            return out
+        if isinstance(stmt, (ast.Import, ast.ImportFrom)):
+            out = dict(state)
+            for alias in stmt.names:
+                name = (alias.asname or alias.name).split(".")[0]
+                out[name] = (CLEAN, False)
+            return out
+        if isinstance(stmt, ast.Delete):
+            out = dict(state)
+            for t in stmt.targets:
+                if isinstance(t, ast.Name):
+                    out.pop(t.id, None)
+            return out
+        return state
+
+    def _assign(self, out: Dict[str, Val], target: ast.AST,
+                value_expr: ast.AST, val: Val) -> None:
+        if isinstance(target, (ast.Tuple, ast.List)) and isinstance(
+            value_expr, (ast.Tuple, ast.List)
+        ) and len(target.elts) == len(value_expr.elts):
+            for t, v in zip(target.elts, value_expr.elts):
+                self._assign(out, t, v, self.eval(out, v))
+            return
+        self._bind(out, target, val)
+
+    def _bind(self, out: Dict[str, Val], target: ast.AST, val: Val) -> None:
+        if isinstance(target, ast.Name):
+            out[target.id] = val
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            # unpacking an opaque value: every element inherits its status
+            for t in target.elts:
+                self._bind(out, t, (val[0], False))
+        elif isinstance(target, ast.Starred):
+            self._bind(out, target.value, val)
+        # attribute/subscript stores don't (re)bind a local

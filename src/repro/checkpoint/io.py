@@ -90,9 +90,10 @@ def load_checkpoint(path: str):
     for k, fields in factors.items():
         insert(
             k,
-            # repro-lint: disable=RPL005 -- restores verbatim buffers that
-            # were saved under the invariant; masking here would silently
-            # repair (and so hide) a corrupted checkpoint
+            # restores verbatim buffers saved under the invariant; masking
+            # here would silently repair (and so hide) a corrupted
+            # checkpoint — the taint analysis proves this verbatim move
+            # clean, so no RPL005 suppression is needed
             LowRankFactor(
                 U=jnp.asarray(fields["U"]),
                 S=jnp.asarray(fields["S"]),

@@ -214,10 +214,13 @@ class FedLRTNaiveProgram:
             jnp.where(jnp.any(ok), jnp.argmax(ok), sigma.shape[0]), 1, r_max
         )
         keep = rank_mask(r1.astype(jnp.float32), r_max)
+        # masking U/V is value-neutral (S's zero rows already annihilate the
+        # truncated-SVD junk columns) but keeps the zero-inactive-columns
+        # layout invariant literally true on the reconstructed factor
         new_f = LowRankFactor(
-            U=P[:, :r_max],
+            U=P[:, :r_max] * keep[None, :],
             S=jnp.diag(sigma[:r_max] * keep),
-            V=Qt[:r_max, :].T,
+            V=Qt[:r_max, :].T * keep[None, :],
             rank=r1.astype(jnp.float32),
         )
         metrics = {

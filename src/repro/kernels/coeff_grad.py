@@ -52,6 +52,8 @@ def atb(
     Kb = B.shape[1]
     bm, bka = min(bm, M), min(bka, Ka)
     assert M % bm == 0 and Ka % bka == 0, (M, Ka, bm, bka)
+    # deferred import: lowrank_matmul owns the tile guard (and shares the
+    # constraint table in repro.kernels.constraints with the RPL009 linter)
     from repro.kernels.lowrank_matmul import _check_tiles
 
     _check_tiles(interpret, A.dtype, bm=(bm, "sublane"), bka=(bka, "lane"),

@@ -1,0 +1,46 @@
+"""TPU tile/sublane constraint table for the Pallas kernel path — as data.
+
+The MXU addresses VMEM in (sublane, lane) tiles whose minimum sublane
+count depends on the element width: 8 rows for 4-byte types, 16 for
+2-byte types, 32 for 1-byte types; the lane (minor) dim is always 128.
+PR 2's bf16 ``M % 16 == 8`` padding bug was exactly a violation of this
+table, fixed at runtime by ``_check_tiles``; exporting the table as plain
+data lets the static analyzer (``repro.analysis.shapes`` / rule RPL009)
+evaluate the same constraints at lint time, against the same numbers the
+kernels enforce — one source of truth for both.
+
+This module is deliberately **jax-free** so the analyzer can import it
+without pulling in a backend.
+"""
+from __future__ import annotations
+
+#: minor-dim tile quantum (every lane-aligned dim is a multiple of this)
+LANE = 128
+
+#: element byte width -> minimum second-to-minor (sublane) tile dim
+SUBLANE_BY_ITEMSIZE = {4: 8, 2: 16, 1: 32}
+
+#: dtype name -> element byte width (the dtypes the kernel path accepts)
+DTYPE_ITEMSIZE = {
+    "float32": 4,
+    "int32": 4,
+    "uint32": 4,
+    "bfloat16": 2,
+    "float16": 2,
+    "int8": 1,
+    "uint8": 1,
+    "float8_e4m3fn": 1,
+    "float8_e5m2": 1,
+}
+
+
+def sublane(dtype_name: str) -> int:
+    """Minimum sublane tile dim for a dtype *name* (jax-free lookup)."""
+    try:
+        itemsize = DTYPE_ITEMSIZE[dtype_name]
+    except KeyError:
+        raise ValueError(
+            f"unknown kernel dtype {dtype_name!r}; known: "
+            f"{sorted(DTYPE_ITEMSIZE)}"
+        ) from None
+    return SUBLANE_BY_ITEMSIZE[itemsize]

@@ -21,14 +21,21 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.constraints import LANE, SUBLANE_BY_ITEMSIZE
+
 DEFAULT_BM = 256
 DEFAULT_BK = 512
 DEFAULT_BN = 256
 
 
 def _min_sublane(dtype) -> int:
-    """MXU minimum second-to-minor tile dim: 8 (f32) / 16 (bf16) / 32 (i8)."""
-    return {4: 8, 2: 16, 1: 32}.get(jnp.dtype(dtype).itemsize, 8)
+    """MXU minimum second-to-minor tile dim: 8 (f32) / 16 (bf16) / 32 (i8).
+
+    The numbers live in :mod:`repro.kernels.constraints` (shared with the
+    static analyzer's RPL009 shape interpreter); this wrapper only resolves
+    the jax dtype object to its byte width.
+    """
+    return SUBLANE_BY_ITEMSIZE.get(jnp.dtype(dtype).itemsize, 8)
 
 
 def _check_tiles(interpret: bool, dtype, **tiles):
@@ -40,7 +47,7 @@ def _check_tiles(interpret: bool, dtype, **tiles):
         return
     sub = _min_sublane(dtype)
     for name, (size, kind) in tiles.items():
-        mult = 128 if kind == "lane" else sub
+        mult = LANE if kind == "lane" else sub
         if size % mult:
             raise ValueError(
                 f"{name}={size} is not a multiple of {mult} "

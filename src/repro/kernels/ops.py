@@ -40,10 +40,9 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.coeff_grad import atb
+from repro.kernels.constraints import LANE
 from repro.kernels.lowrank_matmul import _min_sublane as _sublane
 from repro.kernels.lowrank_matmul import avt, xus
-
-LANE = 128
 
 #: model-level kernel dispatch policies (ModelConfig.kernels / --kernels)
 KERNEL_POLICIES = ("auto", "interpret", "off")

@@ -330,6 +330,306 @@ def test_rpl008_validated_fields_are_clean(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# the dataflow tier: path sensitivity the lexical rules lacked
+# ---------------------------------------------------------------------------
+
+# a mask is computed and applied — but only on one branch.  Every path
+# must be sanitizer-dominated, so this is a genuine violation.
+BRANCH_ONLY_MASKED = """
+def apply(f, g, lr, flag):
+    m = rank_mask(f.rank, f.r_max, dtype=f.S.dtype)
+    S_new = f.S - lr * g
+    if flag:
+        S_new = mask_coeff(S_new, m)
+    return LowRankFactor(U=f.U, S=S_new, V=f.V, rank=f.rank)
+"""
+
+
+def test_rpl005_dataflow_flags_branch_only_mask(tmp_path):
+    bad = check(
+        tmp_path, "src/repro/core/update.py", BRANCH_ONLY_MASKED, "RPL005"
+    )
+    assert len(bad) == 1
+    assert "S=" in bad[0].message
+
+
+def test_rpl005_legacy_lexical_rule_misses_branch_only_mask(tmp_path):
+    """The regression the CFG rewrite exists for: PR 7's lexical rule sees
+    `mask_coeff` somewhere in the function and calls it clean — it cannot
+    ask *on which paths* the sanitizer dominates the write."""
+    from repro.analysis.rules import LegacyFactorLayoutWrites
+
+    path = tmp_path / "src" / "repro" / "core" / "update.py"
+    path.parent.mkdir(parents=True)
+    path.write_text(textwrap.dedent(BRANCH_ONLY_MASKED))
+    assert lint_file(str(path), [LegacyFactorLayoutWrites()]) == []
+
+
+def test_rpl005_mask_on_every_branch_is_clean(tmp_path):
+    ok = check(
+        tmp_path, "src/repro/core/update.py",
+        """
+        def apply(f, g, lr, flag):
+            m = rank_mask(f.rank, f.r_max, dtype=f.S.dtype)
+            if flag:
+                S_new = mask_coeff(f.S - lr * g, m)
+            else:
+                S_new = jnp.zeros_like(f.S)
+            return LowRankFactor(U=f.U, S=S_new, V=f.V, rank=f.rank)
+        """,
+        "RPL005",
+    )
+    assert ok == []
+
+
+def test_rpl005_loop_reassignment_is_path_sensitive(tmp_path):
+    # masked before the loop, overwritten unmasked inside it: the back
+    # edge carries FRESH into the write on the second iteration
+    bad = check(
+        tmp_path, "src/repro/core/update.py",
+        """
+        def apply(f, gs, lr):
+            m = rank_mask(f.rank, f.r_max, dtype=f.S.dtype)
+            S_new = mask_coeff(f.S, m)
+            for g in gs:
+                out = LowRankFactor(U=f.U, S=S_new, V=f.V, rank=f.rank)
+                S_new = S_new - lr * g
+            return out
+        """,
+        "RPL005",
+    )
+    assert len(bad) == 1
+
+
+# ---------------------------------------------------------------------------
+# RPL009: the static shape/dtype interpreter over the kernel entry points
+# ---------------------------------------------------------------------------
+
+OPS = REPO / "src" / "repro" / "kernels" / "ops.py"
+
+
+def _lint_ops_variant(tmp_path, source: str):
+    path = tmp_path / "src" / "repro" / "kernels" / "ops.py"
+    path.parent.mkdir(parents=True)
+    path.write_text(source)
+    rules = [r for r in get_rules() if r.id == "RPL009"]
+    return lint_file(str(path), rules)
+
+
+def test_rpl009_shipped_kernels_are_clean(tmp_path):
+    assert _lint_ops_variant(tmp_path, OPS.read_text()) == []
+
+
+def test_rpl009_catches_sublane_padding_removal_statically(tmp_path):
+    """The PR 2 bug class: hard-coding the f32 sublane (8) breaks bf16
+    shapes with M % 16 == 8.  No JAX execution — the interpreter rejects
+    the mutant from the constraint table alone."""
+    src = OPS.read_text()
+    mutant = src.replace(
+        "bm = _block(256, M, _sublane(x.dtype))",
+        "bm = _block(256, M, 8)",
+    )
+    assert mutant != src
+    bad = _lint_ops_variant(tmp_path, mutant)
+    assert len(bad) >= 1
+    msgs = "\n".join(f.message for f in bad)
+    assert "sublane" in msgs and "bfloat16" in msgs
+    # the witness cases that expose it ride along in the message
+    assert "bf16-m-mod-16-eq-8" in msgs
+
+
+def test_rpl009_catches_dropped_cotangent_cast(tmp_path):
+    """Mixed-precision custom-VJP drift: dropping the dS cast leaves an
+    f32 cotangent against a bf16 primal."""
+    src = OPS.read_text()
+    mutant = src.replace(
+        "dS[:R, :R].astype(S.dtype),",
+        "dS[:R, :R],",
+    )
+    assert mutant != src
+    bad = _lint_ops_variant(tmp_path, mutant)
+    assert any("dS" in f.message and "dtype" in f.message for f in bad)
+
+
+# ---------------------------------------------------------------------------
+# autofix: --fix applies mechanical repairs; the round trip is a fixpoint
+# ---------------------------------------------------------------------------
+
+MUTANT_TREE = {
+    # RPL003: unsorted listdir (mechanical sorted() wrap)
+    "src/repro/fed/sweep.py": """
+        import os
+
+        def shards(d):
+            return [f for f in os.listdir(d) if f.endswith(".npz")]
+        """,
+    # RPL005: mask computed but not applied at the ctor (mechanical re-mask)
+    "src/repro/core/mutant.py": """
+        def apply(f, g, lr):
+            m = rank_mask(f.rank, f.r_max, dtype=f.S.dtype)
+            S_new = f.S - lr * g
+            return LowRankFactor(U=f.U, S=S_new, V=f.V, rank=f.rank)
+        """,
+}
+
+
+def _seed_mutants(tmp_path):
+    paths = []
+    for rel, code in MUTANT_TREE.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(code))
+        paths.append(str(p))
+    return paths
+
+
+def test_fix_round_trip_is_a_fixpoint(tmp_path):
+    paths = _seed_mutants(tmp_path)
+    select = ["--select", "RPL003,RPL005"]
+    assert lint_main(paths + select) == 1
+
+    # first --fix pass repairs both files and re-lints clean
+    assert lint_main(paths + select + ["--fix"]) == 0
+    fixed = (tmp_path / "src/repro/fed/sweep.py").read_text()
+    assert "sorted(os.listdir(d))" in fixed
+    fixed = (tmp_path / "src/repro/core/mutant.py").read_text()
+    assert "mask_coeff(S_new, m)" in fixed
+    before = {p: Path(p).read_text() for p in paths}
+
+    # second pass: nothing left to fix, no file churn
+    assert lint_main(paths + select + ["--fix"]) == 0
+    assert {p: Path(p).read_text() for p in paths} == before
+
+
+def test_fix_scaffold_inserts_auditable_suppression(tmp_path):
+    p = tmp_path / "src" / "repro" / "fed" / "t.py"
+    p.parent.mkdir(parents=True)
+    p.write_text("import time\n\n\ndef a():\n    return time.time()\n")
+    # time.time() has no mechanical fix; --scaffold turns it into tracked debt
+    assert lint_main([str(p), "--select", "RPL003", "--fix"]) == 1
+    assert (
+        lint_main([str(p), "--select", "RPL003", "--fix", "--scaffold"]) == 0
+    )
+    text = p.read_text()
+    assert "# repro-lint: disable=RPL003 -- TODO justify:" in text
+    # and the scaffolded suppression actually governs the finding
+    assert lint_main([str(p), "--select", "RPL003"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# SARIF emission, fingerprint stability, and the CI baseline gate
+# ---------------------------------------------------------------------------
+
+
+def test_sarif_log_shape_and_fingerprints(tmp_path):
+    import json
+
+    from repro.analysis.sarif import fingerprints, to_sarif
+
+    p = tmp_path / "src" / "repro" / "fed" / "t.py"
+    p.parent.mkdir(parents=True)
+    p.write_text("import time\nT0 = time.time()\n")
+    findings = lint_paths([str(p)], select=["RPL003"])
+    assert findings
+    log = to_sarif(findings, str(tmp_path))
+    assert log["version"] == "2.1.0"
+    (run,) = log["runs"]
+    assert any(r["id"] == "RPL009" for r in run["tool"]["driver"]["rules"])
+    (res,) = run["results"]
+    assert res["ruleId"] == "RPL003"
+    assert res["locations"][0]["physicalLocation"]["artifactLocation"][
+        "uri"
+    ] == "src/repro/fed/t.py"
+    assert res["fingerprints"]["reproLint/v1"]
+    json.dumps(log)  # serializable
+
+    # line drift must NOT change the fingerprint (else every unrelated
+    # edit invalidates the committed baseline)
+    fp_before = fingerprints(findings, str(tmp_path))
+    p.write_text("# a comment pushed everything down\nimport time\nT0 = time.time()\n")
+    drifted = lint_paths([str(p)], select=["RPL003"])
+    assert [f.line for f in drifted] != [f.line for f in findings]
+    assert fingerprints(drifted, str(tmp_path)) == fp_before
+
+
+def test_baseline_grandfathers_old_findings_only(tmp_path):
+    from repro.analysis.sarif import (
+        diff_baseline,
+        dump_sarif,
+        load_baseline,
+    )
+
+    p = tmp_path / "src" / "repro" / "fed" / "t.py"
+    p.parent.mkdir(parents=True)
+    p.write_text("import time\nT0 = time.time()\n")
+    old = lint_paths([str(p)], select=["RPL003"])
+    baseline_file = tmp_path / "baseline.sarif"
+    baseline_file.write_text(dump_sarif(old, str(tmp_path)))
+
+    # same tree: everything grandfathered, nothing gates
+    new, grand = diff_baseline(
+        old, load_baseline(str(baseline_file)), str(tmp_path)
+    )
+    assert new == [] and len(grand) == len(old)
+
+    # a fresh violation gates even though the old one is still present
+    p.write_text("import time\nT0 = time.time()\nT1 = time.monotonic()\n")
+    now = lint_paths([str(p)], select=["RPL003"])
+    new, grand = diff_baseline(
+        now, load_baseline(str(baseline_file)), str(tmp_path)
+    )
+    assert len(grand) == 1 and len(new) == 1
+    assert "monotonic" not in grand[0].message
+
+
+def test_cli_sarif_output_and_baseline_gate(tmp_path, capsys):
+    import json
+
+    p = tmp_path / "src" / "repro" / "fed" / "t.py"
+    p.parent.mkdir(parents=True)
+    p.write_text("import time\nT0 = time.time()\n")
+    out = tmp_path / "report.sarif"
+
+    # --format sarif --output writes the log; findings still set exit 1
+    assert lint_main(
+        [str(p), "--select", "RPL003", "--format", "sarif",
+         "--output", str(out)]
+    ) == 1
+    log = json.loads(out.read_text())
+    assert len(log["runs"][0]["results"]) == 1
+
+    # adopting that log as the baseline grandfathers the finding: exit 0
+    assert lint_main(
+        [str(p), "--select", "RPL003", "--baseline", str(out)]
+    ) == 0
+    # a new violation beyond the baseline gates again
+    p.write_text("import time\nT0 = time.time()\nT1 = time.monotonic()\n")
+    assert lint_main(
+        [str(p), "--select", "RPL003", "--baseline", str(out)]
+    ) == 1
+    capsys.readouterr()
+
+    assert lint_main([str(p), "--scaffold"]) == 2  # requires --fix
+    assert lint_main([str(p), "--baseline", str(tmp_path / "nope.sarif")]) == 2
+
+
+def test_committed_baseline_matches_clean_tree():
+    """The shipped gate: lint the real tree against the real committed
+    baseline exactly as CI does."""
+    import os
+
+    from repro.analysis.sarif import diff_baseline, load_baseline
+
+    findings = lint_paths(
+        [str(REPO / "src"), str(REPO / "benchmarks"), str(REPO / "examples")]
+    )
+    known = load_baseline(str(REPO / "analysis-baseline.sarif"))
+    new, _ = diff_baseline(findings, known, str(REPO))
+    assert new == [], "\n".join(f.render() for f in new)
+    assert os.path.exists(str(REPO / "analysis-baseline.sarif"))
+
+
+# ---------------------------------------------------------------------------
 # suppressions, CLI, and the shipped-tree pin
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,341 @@
+"""The dataflow tier under repro-lint: CFG shape on the Python constructs
+the rules must model exactly (branches, loops with else, try/except/finally,
+with-as, match, nested defs), fixpoint termination on loopy graphs, and the
+FixpointDiverged guard against non-monotone transfer functions."""
+from __future__ import annotations
+
+import ast
+import textwrap
+
+import pytest
+
+from repro.analysis.cfg import (
+    ATOMIC_DEFS,
+    BranchTest,
+    LoopBind,
+    build_cfg,
+    CFG,
+)
+from repro.analysis.dataflow import (
+    FixpointDiverged,
+    ForwardAnalysis,
+    run_forward,
+    walk_states,
+)
+
+
+def cfg_of(code: str) -> CFG:
+    return build_cfg(ast.parse(textwrap.dedent(code)))
+
+
+def stmts_of(cfg: CFG):
+    return [s for b in cfg.reachable() for s in b.stmts]
+
+
+# ---------------------------------------------------------------------------
+# CFG construction
+# ---------------------------------------------------------------------------
+
+
+def test_if_else_joins_and_branch_test_is_synthetic():
+    cfg = cfg_of(
+        """
+        if cond:
+            a = 1
+        else:
+            a = 2
+        b = a
+        """
+    )
+    tests = [s for s in stmts_of(cfg) if isinstance(s, BranchTest)]
+    assert len(tests) == 1
+    assert isinstance(tests[0].origin, ast.If)
+    # the block holding the test has two successors (then / else)
+    (test_block,) = [b for b in cfg.blocks if tests[0] in b.stmts]
+    assert len(test_block.succs) == 2
+    # both arms reconverge before `b = a`
+    (join,) = [
+        b for b in cfg.reachable()
+        if any(isinstance(s, ast.Assign)
+               and isinstance(s.targets[0], ast.Name)
+               and s.targets[0].id == "b" for s in b.stmts)
+    ]
+    assert len(join.preds) == 2
+
+
+def test_while_else_runs_only_on_normal_exit():
+    cfg = cfg_of(
+        """
+        while cond:
+            body = 1
+        else:
+            tail = 2
+        after = 3
+        """
+    )
+    head = next(b for b in cfg.blocks if b.label == "while.head")
+    # head branches into body and else (NOT straight to after)
+    labels = sorted(s.label for s in head.succs)
+    assert labels == ["while.body", "while.else"]
+    body = next(b for b in cfg.blocks if b.label == "while.body")
+    assert head in body.succs  # the back edge the fixpoint needs
+
+
+def test_for_else_and_loop_bind():
+    cfg = cfg_of(
+        """
+        for x in xs:
+            use(x)
+        else:
+            done = 1
+        """
+    )
+    binds = [s for s in stmts_of(cfg) if isinstance(s, LoopBind)]
+    assert len(binds) == 1
+    assert isinstance(binds[0].target, ast.Name) and binds[0].target.id == "x"
+    head = next(b for b in cfg.blocks if b.label == "for.head")
+    assert sorted(s.label for s in head.succs) == ["for.body", "for.else"]
+
+
+def test_break_exits_to_after_not_else():
+    cfg = cfg_of(
+        """
+        while cond:
+            if stop:
+                break
+            step = 1
+        after = 2
+        """
+    )
+    after = next(b for b in cfg.blocks if b.label == "while.after")
+    # one pred is the break block, distinct from the loop head
+    head = next(b for b in cfg.blocks if b.label == "while.head")
+    assert any(p is not head for p in after.preds)
+    assert head in after.preds  # and normal exhaustion still reaches it
+
+
+def test_try_handler_reachable_from_before_and_after_body():
+    cfg = cfg_of(
+        """
+        pre = 1
+        try:
+            mid = 2
+        except ValueError:
+            caught = 3
+        post = 4
+        """
+    )
+    handler = next(b for b in cfg.blocks if b.label == "try.handler")
+    body = next(b for b in cfg.blocks if b.label == "try.body")
+    # conservative bracketing: the handler sees the state both where the
+    # body ran to completion and where it never ran at all
+    assert body in handler.preds
+    assert any(p is not body for p in handler.preds)
+
+
+def test_try_finally_on_every_exit_and_as_binding():
+    cfg = cfg_of(
+        """
+        try:
+            x = open_thing()
+        except OSError as e:
+            log(e)
+        finally:
+            cleanup()
+        """
+    )
+    fin = next(b for b in cfg.blocks if b.label == "try.finally")
+    assert len(fin.preds) >= 2  # success path + handler path
+    # `as e` materialized as an assignment the transfer functions see
+    handler = next(b for b in cfg.blocks if b.label == "try.handler")
+    first = handler.stmts[0]
+    assert isinstance(first, ast.Assign)
+    assert first.targets[0].id == "e"
+
+
+def test_with_as_materializes_assignment():
+    cfg = cfg_of(
+        """
+        with open(p) as fh:
+            data = fh.read()
+        """
+    )
+    assigns = [
+        s for s in stmts_of(cfg)
+        if isinstance(s, ast.Assign) and isinstance(s.targets[0], ast.Name)
+    ]
+    assert any(a.targets[0].id == "fh" for a in assigns)
+
+
+def test_match_non_exhaustive_falls_through():
+    cfg = cfg_of(
+        """
+        match v:
+            case 1:
+                a = 1
+            case 2:
+                a = 2
+        after = 3
+        """
+    )
+    after = next(b for b in cfg.blocks if b.label == "match.after")
+    # two case tails + the no-case-matched edge from the subject block
+    assert len(after.preds) == 3
+    cfg2 = cfg_of(
+        """
+        match v:
+            case 1:
+                a = 1
+            case _:
+                a = 2
+        after = 3
+        """
+    )
+    after2 = next(b for b in cfg2.blocks if b.label == "match.after")
+    assert len(after2.preds) == 2  # wildcard: no fallthrough edge
+
+
+def test_nested_defs_are_atomic_and_comprehensions_are_plain():
+    cfg = cfg_of(
+        """
+        def outer():
+            if x:
+                return 1
+            return 2
+
+        ys = [f(v) for v in vs if v]
+        """
+    )
+    stmts = stmts_of(cfg)
+    defs = [s for s in stmts if isinstance(s, ATOMIC_DEFS)]
+    assert len(defs) == 1  # the nested def is ONE statement here
+    # the comprehension's internal if/for did not leak branch tests
+    assert [s for s in stmts if isinstance(s, BranchTest)] == []
+
+
+def test_code_after_return_is_not_reachable():
+    cfg = cfg_of(
+        """
+        def f():
+            return 1
+            dead = 2
+        """
+    )
+    fn = ast.parse(textwrap.dedent(
+        """
+        def f():
+            return 1
+            dead = 2
+        """
+    )).body[0]
+    fcfg = build_cfg(fn)
+    reached = stmts_of(fcfg)
+    assert not any(
+        isinstance(s, ast.Assign) and s.targets[0].id == "dead"
+        for s in reached
+    ), cfg
+
+
+# ---------------------------------------------------------------------------
+# fixpoint engine
+# ---------------------------------------------------------------------------
+
+
+class _Consts(ForwardAnalysis):
+    """Tiny constant-ness domain: var -> 'const' | 'var'; join demotes."""
+
+    def initial(self):
+        return {}
+
+    def join(self, a, b):
+        out = dict(a)
+        for k, v in b.items():
+            out[k] = v if out.get(k, v) == v else "var"
+        return out
+
+    def transfer(self, state, stmt):
+        if isinstance(stmt, ast.Assign) and isinstance(
+            stmt.targets[0], ast.Name
+        ):
+            new = dict(state)
+            if isinstance(stmt.value, ast.Constant):
+                new[stmt.targets[0].id] = "const"
+            else:
+                new[stmt.targets[0].id] = "var"
+            return new
+        if isinstance(stmt, LoopBind) and isinstance(stmt.target, ast.Name):
+            new = dict(state)
+            new[stmt.target.id] = "var"
+            return new
+        return state
+
+
+def test_fixpoint_terminates_on_loops_and_joins_branches():
+    cfg = cfg_of(
+        """
+        x = 1
+        while cond:
+            x = compute()
+        y = x
+        """
+    )
+    states = run_forward(cfg, _Consts())
+    # at the loop head x is the JOIN of const (entry) and var (back edge)
+    final = [st for s, st in walk_states(cfg, _Consts(), states)
+             if isinstance(s, ast.Assign)
+             and isinstance(s.targets[0], ast.Name)
+             and s.targets[0].id == "y"]
+    assert final == [{"x": "var"}]
+
+
+def test_branch_join_is_least_upper_bound():
+    cfg = cfg_of(
+        """
+        if cond:
+            x = 1
+        else:
+            x = 2
+        y = x
+        """
+    )
+    final = [st for s, st in walk_states(cfg, _Consts())
+             if isinstance(s, ast.Assign)
+             and isinstance(s.targets[0], ast.Name)
+             and s.targets[0].id == "y"]
+    assert final == [{"x": "const"}]  # const ⊔ const = const
+
+
+def test_non_monotone_transfer_raises_fixpoint_diverged():
+    class Oscillator(_Consts):
+        def __init__(self):
+            self.n = 0
+
+        def transfer(self, state, stmt):  # deliberately never stabilizes
+            self.n += 1
+            return {"tick": str(self.n)}
+
+        def join(self, a, b):  # not a lub: last writer wins, so no fixpoint
+            return b
+
+    cfg = cfg_of(
+        """
+        while cond:
+            x = 1
+        """
+    )
+    with pytest.raises(FixpointDiverged):
+        run_forward(cfg, Oscillator(), max_passes=8)
+
+
+def test_walk_states_covers_every_reachable_statement():
+    src = """
+    a = 1
+    if a:
+        b = 2
+    for i in xs:
+        c = 3
+    """
+    cfg = cfg_of(src)
+    kinds = [type(s).__name__ for s, _ in walk_states(cfg, _Consts())]
+    assert kinds.count("Assign") == 3
+    assert "BranchTest" in kinds and "LoopBind" in kinds
