@@ -11,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   sim_*        system simulator: time-to-target-loss, engines × stragglers
   roofline_*   dry-run roofline terms (requires results/dryrun/*.json)
   lint_*       repro-lint analyzer cost (dataflow tier runs on every PR)
+  telemetry_*  telemetry hub overhead: disabled vs enabled vs jsonl sink
 
 Besides printing, every group persists its rows as a per-PR artifact
 ``<out-dir>/BENCH_<group>.json`` (schema: ``bench``, ``rows``,
@@ -88,7 +89,7 @@ def main() -> None:
     ap.add_argument(
         "--only", type=str, default=None,
         help="comma-separated subset: lsq,costs,cv,wire,kernels,sim,"
-        "ablation,roofline,lint",
+        "ablation,roofline,lint,telemetry",
     )
     ap.add_argument(
         "--out-dir", type=str, default="results",
@@ -163,6 +164,11 @@ def main() -> None:
 
         with _record("lint", args.out_dir, git_sha):
             lint_overhead(repeats=1 if args.smoke else 3)
+    if want("telemetry"):
+        from benchmarks.bench_telemetry import telemetry_overhead
+
+        with _record("telemetry", args.out_dir, git_sha):
+            telemetry_overhead(rounds=3 if args.smoke else 6)
     sys.stdout.flush()
 
 

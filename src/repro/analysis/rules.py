@@ -169,23 +169,29 @@ class NoNondeterminism(Rule):
     that is what makes the convergence plots reproducible and the
     checkpoint spec-hash meaningful.  Wall-clock reads, ``random.*``,
     legacy global-state ``np.random.*``, seedless ``default_rng()`` and
-    iteration over unordered containers all break that.  Timing belongs in
-    ``launch/`` / ``benchmarks/``; randomness comes from a seeded
-    generator or a threaded PRNG key.
+    iteration over unordered containers all break that.  Library code
+    reads the wall clock only through the sanctioned
+    :mod:`repro.telemetry.clock` shim (the one file exempt here — the
+    rule is the enforcement half of that contract); randomness comes from
+    a seeded generator or a threaded PRNG key.
     """
 
     id = "RPL003"
     title = "nondeterminism in library code"
     severity = "error"
     hint = (
-        "thread a seeded np.random.default_rng(seed) / jax PRNG key, or "
-        "move timing into launch//benchmarks/"
+        "thread a seeded np.random.default_rng(seed) / jax PRNG key; for "
+        "timing use repro.telemetry.clock.perf_seconds()"
     )
 
     def applies_to(self, info: PathInfo) -> bool:
         if info.is_tests or info.is_benchmarks or info.is_examples:
             return False
         if not info.repro:
+            return False
+        # the one sanctioned wall-clock seam: every other module times
+        # through repro.telemetry.clock, so the exemption stays this narrow
+        if info.under("telemetry", "clock.py"):
             return False
         return not info.under("launch")
 

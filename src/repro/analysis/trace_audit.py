@@ -58,6 +58,18 @@ class TraceAudit:
             (s, n) for s, n in self.counts.items() if n > self.limit
         )
 
+    def publish(self, hub=None) -> None:
+        """Republish the per-callsite trace counts as ``jit.traces``
+        telemetry counters (default: the session hub from
+        :func:`repro.telemetry.get_hub`) — recompiles show up next to the
+        round spans they stalled."""
+        if hub is None:
+            from repro.telemetry import get_hub
+
+            hub = get_hub()
+        for (fn, ln, qn), n in sorted(self.counts.items()):
+            hub.counter("jit.traces", float(n), site=f"{fn}:{ln}", fn=qn)
+
     def assert_within_limit(self) -> None:
         bad = self.violations()
         if bad:

@@ -27,6 +27,7 @@ from repro.api.spec import (  # noqa: F401
     ModelSpec,
     ParticipationSpec,
     SimSpec,
+    TelemetrySpec,
     WireSpec,
     load_spec,
 )

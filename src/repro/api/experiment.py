@@ -23,6 +23,13 @@ from repro.api.tasks import Task, build_task
 
 def build(spec: ExperimentSpec) -> "Experiment":
     """Resolve a validated spec into a runnable :class:`Experiment`."""
+    from repro.telemetry import hub_from_spec, set_hub
+
+    hub = hub_from_spec(
+        spec.telemetry,
+        meta={"spec_hash": spec.spec_hash(), "spec_name": spec.name},
+    )
+    set_hub(hub)  # module-global observers (kernel dispatch, trace audit)
     task = build_task(spec)
     fc = spec.fed.to_fed_config()
     participation = spec.participation.build(seed=spec.seed)
@@ -46,6 +53,7 @@ def build(spec: ExperimentSpec) -> "Experiment":
             checkpoint_dir=spec.checkpoint.dir,
             checkpoint_every=spec.checkpoint.effective_every,
             checkpoint_meta=ckpt_meta,
+            telemetry=hub,
         )
         # None = unset: the factory's own defaults apply (one source of
         # truth for them — make_sim_engine), never re-hardcoded here
@@ -74,8 +82,9 @@ def build(spec: ExperimentSpec) -> "Experiment":
             checkpoint_every=spec.checkpoint.effective_every,
             wire_codec=spec.wire.codec,
             checkpoint_meta=ckpt_meta,
+            telemetry=hub,
         )
-    return Experiment(spec=spec, task=task, engine=engine)
+    return Experiment(spec=spec, task=task, engine=engine, hub=hub)
 
 
 @dataclasses.dataclass
@@ -91,6 +100,7 @@ class Experiment:
     spec: ExperimentSpec
     task: Task
     engine: object
+    hub: object = None  # the run's TelemetryHub (engines share it)
 
     @property
     def params(self):
@@ -110,7 +120,11 @@ class Experiment:
         """Train ``rounds`` (default ``spec.rounds``) aggregation rounds."""
         n = self.spec.rounds if rounds is None else rounds
         le = self.spec.log_every if log_every is None else log_every
-        return self.engine.train(self.task.batcher, n, log_every=le)
+        try:
+            return self.engine.train(self.task.batcher, n, log_every=le)
+        finally:
+            if self.hub is not None:
+                self.hub.flush()  # file sinks land even on an interrupt
 
     def evaluate(self) -> float:
         """The task's holdout metric (accuracy) on the current params."""
@@ -196,6 +210,16 @@ class Experiment:
             if s.checkpoint.dir
             else "(off)"
         )
+        tel = (
+            f"{s.telemetry.sinks}"
+            + (f" → {s.telemetry.dir}" if s.telemetry.dir else "")
+            + (
+                f" (every {s.telemetry.sample_every} rounds)"
+                if s.telemetry.sample_every > 1 else ""
+            )
+            if s.telemetry.enabled
+            else "(off)"
+        )
         lines = [
             f"experiment {s.name or '(unnamed)'}  [spec {s.spec_hash()}]",
             f"  task           {s.model.kind}: {self.task.description}",
@@ -212,6 +236,7 @@ class Experiment:
             f"  wire           {wire}",
             f"  sim            {s.sim.profile or '(no virtual clock)'}",
             f"  checkpoint     {ckpt}",
+            f"  telemetry      {tel}",
             f"  rounds         {s.rounds}  (seed {s.seed})",
         ]
         return "\n".join(lines)

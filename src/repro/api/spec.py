@@ -345,6 +345,47 @@ class CheckpointSpec:
         return self.every if self.dir else 0
 
 
+@dataclasses.dataclass(frozen=True)
+class TelemetrySpec:
+    """Structured telemetry (:mod:`repro.telemetry`): round/phase spans,
+    metric streams, JSONL event logs and Perfetto traces.
+
+    ``enabled=False`` (the default) keeps the console progress sink only —
+    runs look exactly as before.  ``sinks`` is a comma-separated subset of
+    ``console``, ``memory``, ``jsonl``, ``perfetto``; file sinks write
+    ``events.jsonl`` / ``trace.json`` under ``dir``.  ``sample_every``
+    keeps every Nth round's gauge/hist events (spans, counters, and
+    progress are never sampled).  Telemetry only ever *reads* run state,
+    so enabling it cannot change params or history.
+    """
+
+    enabled: bool = False
+    sinks: str = "console"
+    dir: Optional[str] = None
+    sample_every: int = 1
+
+    def __post_init__(self):
+        from repro.telemetry.sinks import SINK_NAMES
+
+        if self.sample_every < 1:
+            raise ValueError("telemetry.sample_every must be >= 1")
+        names = [s.strip() for s in self.sinks.split(",") if s.strip()]
+        if not names:
+            raise ValueError("telemetry.sinks must name at least one sink")
+        for n in names:
+            if n not in SINK_NAMES:
+                raise ValueError(
+                    f"unknown telemetry sink {n!r}; expected a comma list "
+                    f"over {SINK_NAMES}"
+                )
+        if self.enabled and self.dir is None and (
+            "jsonl" in names or "perfetto" in names
+        ):
+            raise ValueError(
+                "telemetry.dir is required for the jsonl/perfetto file sinks"
+            )
+
+
 def _default_model():
     return ModelSpec(preset="llm-tiny")
 
@@ -371,6 +412,7 @@ class ExperimentSpec:
     wire: WireSpec = field(default_factory=WireSpec)
     sim: SimSpec = field(default_factory=SimSpec)
     checkpoint: CheckpointSpec = field(default_factory=CheckpointSpec)
+    telemetry: TelemetrySpec = field(default_factory=TelemetrySpec)
 
     # -- validation --------------------------------------------------------
 

@@ -121,6 +121,12 @@ class RoundContext:
 #: get the full original shared dict (the server keeps its own copies).
 SERVER = "__server__"
 
+#: canonical phase names of a federated round, in execution order.  The
+#: telemetry span names the engines emit (``phase.client_step``,
+#: ``phase.aggregate``, …) are ``"phase." + <one of these>`` — keep them
+#: in sync so traces stay greppable against the RoundProgram protocol.
+PHASES = ("broadcast", "client_step", "aggregate", "finalize")
+
 
 def split_server(shared):
     """Split a broadcast ``shared`` dict into ``(downlink, server_state)``.

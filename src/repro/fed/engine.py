@@ -33,7 +33,6 @@ that replays the remaining rounds bit-identically.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -52,6 +51,8 @@ from repro.core.baselines import (
 from repro.core.fedlrt import FedLRTProgram
 from repro.fed.participation import Participation
 from repro.fed.wire import Wire
+from repro.telemetry import default_hub
+from repro.telemetry.clock import perf_seconds
 
 #: round-method registry: name → round function.  Extend via
 #: :func:`register_round_method`, never by editing this module — the sim
@@ -182,6 +183,7 @@ class FederatedEngine:
         client_weights=None,
         wire_codec="identity",
         checkpoint_meta: Optional[dict] = None,
+        telemetry=None,
     ):
         if method not in ROUND_METHODS:
             raise ValueError(f"method must be one of {list(ROUND_METHODS)}")
@@ -202,6 +204,10 @@ class FederatedEngine:
         self.client_weights = (
             None if client_weights is None else np.asarray(client_weights, np.float32)
         )
+        # telemetry hub (repro.telemetry): the engine only ever *reads*
+        # state into it, so instrumentation can never perturb a run.  The
+        # default hub renders progress events to stdout and drops the rest.
+        self.telemetry = telemetry if telemetry is not None else default_hub()
         self._loss_fn = loss_fn
         self._round_fn = ROUND_METHODS[method]
         self._donate = donate
@@ -256,44 +262,48 @@ class FederatedEngine:
         instead of one per distinct cohort size.  Comm accounting and the
         recorded ``cohort_size`` stay at the *true* active-cohort size.
         """
-        # repro-lint: disable=RPL003 -- wall-clock here only feeds the
-        # RoundResult.seconds telemetry field; no training decision
-        # depends on it
-        t0 = time.time()
+        t0 = perf_seconds()
         k = jax.tree.leaves(client_batches)[0].shape[0]
         cohort = np.arange(k) if cohort is None else np.asarray(cohort)
         pad_to = self.participation.padded_size(self.cfg.num_clients)
-        if pad_to is not None:
-            w_active = (
-                np.asarray(self.client_weights[cohort], np.float32)
-                if self.client_weights is not None
-                else np.ones(k, np.float32)
-            )
-            if k < pad_to:
-                fill = np.arange(pad_to - k) % k  # repeat active clients
-                idx = np.concatenate([np.arange(k), fill])
-                client_batches = jax.tree.map(
-                    lambda a: jnp.asarray(a)[idx], client_batches
+        # one span over the jitted round step: broadcast → client_step →
+        # aggregate → finalize all execute inside this dispatch (phase-level
+        # spans for staleness groups live in the async engine, which runs
+        # the phases separately)
+        with self.telemetry.span(
+            "round.step", round=int(self.round_idx), cohort=int(k)
+        ):
+            if pad_to is not None:
+                w_active = (
+                    np.asarray(self.client_weights[cohort], np.float32)
+                    if self.client_weights is not None
+                    else np.ones(k, np.float32)
                 )
-            w = jnp.asarray(
-                np.concatenate([w_active, np.zeros(pad_to - k, np.float32)])
-            )
-            step = self._step_for(pad_to, weighted=True)
-            self.params, metrics = step(
-                self.params, client_batches, jnp.int32(self.round_idx), w
-            )
-        elif self.client_weights is None:
-            step = self._step_for(k, weighted=False)
-            self.params, metrics = step(
-                self.params, client_batches, jnp.int32(self.round_idx)
-            )
-        else:
-            step = self._step_for(k, weighted=True)
-            w = jnp.asarray(self.client_weights[cohort])
-            self.params, metrics = step(
-                self.params, client_batches, jnp.int32(self.round_idx), w
-            )
-        metrics = jax.device_get(metrics)
+                if k < pad_to:
+                    fill = np.arange(pad_to - k) % k  # repeat active clients
+                    idx = np.concatenate([np.arange(k), fill])
+                    client_batches = jax.tree.map(
+                        lambda a: jnp.asarray(a)[idx], client_batches
+                    )
+                w = jnp.asarray(
+                    np.concatenate([w_active, np.zeros(pad_to - k, np.float32)])
+                )
+                step = self._step_for(pad_to, weighted=True)
+                self.params, metrics = step(
+                    self.params, client_batches, jnp.int32(self.round_idx), w
+                )
+            elif self.client_weights is None:
+                step = self._step_for(k, weighted=False)
+                self.params, metrics = step(
+                    self.params, client_batches, jnp.int32(self.round_idx)
+                )
+            else:
+                step = self._step_for(k, weighted=True)
+                w = jnp.asarray(self.client_weights[cohort])
+                self.params, metrics = step(
+                    self.params, client_batches, jnp.int32(self.round_idx), w
+                )
+            metrics = jax.device_get(metrics)
         ranks = metrics.get("rank", {})
         if not isinstance(ranks, dict):  # single-factor methods (naive)
             ranks = {"": ranks}
@@ -305,8 +315,7 @@ class FederatedEngine:
             ),
             comm_bytes_per_client=float(metrics.get("comm_bytes_per_client", 0.0)),
             ranks={k_: np.asarray(v) for k_, v in ranks.items()},
-            # repro-lint: disable=RPL003 -- telemetry only (see t0 above)
-            seconds=time.time() - t0,
+            seconds=perf_seconds() - t0,
             cohort_size=k,
             cohort=cohort,
             comm_bytes_per_client_effective=float(
@@ -321,6 +330,7 @@ class FederatedEngine:
             wire_codec=self.wire.name if self.wire is not None else "",
         )
         self.history.append(res)
+        self._publish_round(res, metrics)
         self.round_idx += 1
         if (
             self.checkpoint_dir
@@ -329,6 +339,38 @@ class FederatedEngine:
         ):
             self._save_checkpoint()
         return res
+
+    def _publish_round(self, res: RoundResult, metrics: dict) -> None:
+        """Per-round telemetry: effective-rank and variance-correction
+        gauges plus measured wire bytes per direction.  Read-only — the
+        hub observes the finished round, it never feeds back into one."""
+        hub = self.telemetry
+        if not hub.enabled:
+            return
+        r = int(res.round_idx)
+        if res.ranks:
+            hub.gauge(
+                "rank.effective_mean",
+                float(np.mean([np.mean(v) for v in res.ranks.values()])),
+                round=r,
+            )
+        if "max_coeff_drift" in metrics:
+            hub.gauge(
+                "correction.coeff_drift_max",
+                float(metrics["max_coeff_drift"]),
+                round=r,
+            )
+        if res.wire_codec:
+            hub.counter(
+                "wire.bytes_down",
+                res.wire_bytes_down_per_client * res.cohort_size,
+                round=r, codec=res.wire_codec,
+            )
+            hub.counter(
+                "wire.bytes_up",
+                res.wire_bytes_up_per_client * res.cohort_size,
+                round=r, codec=res.wire_codec,
+            )
 
     # -- checkpoint / restore ----------------------------------------------
 
@@ -430,12 +472,13 @@ class FederatedEngine:
                     if res.wire_codec
                     else f" comm {res.comm_bytes_per_client/1e6:.2f} MB/client"
                 )
-                print(
+                self.telemetry.progress(
                     f"[{self.method}] round {res.round_idx:4d} "
                     f"loss {res.loss_before:.4f}"
                     + (f" → {res.loss_after:.4f}" if res.loss_after is not None else "")
                     + comm
-                    + extra
+                    + extra,
+                    round=int(res.round_idx),
                 )
         return self.history
 

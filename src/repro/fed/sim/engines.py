@@ -36,7 +36,6 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-import time
 from typing import Callable, List, Optional, Sequence
 
 import jax
@@ -75,6 +74,8 @@ from repro.fed.sim.events import (
 )
 from repro.fed.sim.profiles import Fleet, SystemProfile, client_round_flops
 from repro.fed.wire import Wire
+from repro.telemetry import default_hub
+from repro.telemetry.clock import perf_seconds
 
 
 def _analytic_direction_bytes(params, method: str, correction: str):
@@ -173,6 +174,7 @@ class SyncSimEngine(FederatedEngine):
         self.flops_fn = flops_fn if flops_fn is not None else client_round_flops
         self.clock = VirtualClock()
         self.timeline = Timeline()
+        self.telemetry.attach_clock(self.clock)
 
     def run_round(self, client_batches, *, cohort=None) -> RoundResult:
         one_client = jax.tree.map(lambda a: np.asarray(a)[0], client_batches)
@@ -186,9 +188,16 @@ class SyncSimEngine(FederatedEngine):
         dt = max(
             self.fleet[int(c)].round_seconds(flops, down, up) for c in res.cohort
         )
+        t_prev = self.clock.now
         self.clock.advance_to(self.clock.now + dt)
         res.virtual_seconds = dt
         res.t_virtual = self.clock.now
+        # the straggler barrier on the virtual clock: one span per round
+        # on the server track (every client's virtual round is inside it)
+        self.telemetry.span_at(
+            "round", t_prev, self.clock.now,
+            round=int(res.round_idx), cohort=int(res.cohort_size),
+        )
         _resave_checkpoint_if_due(self)
         self.timeline.record(
             self.clock.now, "aggregate", round_idx=res.round_idx,
@@ -278,6 +287,7 @@ class AsyncFederatedEngine(FederatedEngine):
         self.flops_fn = flops_fn if flops_fn is not None else client_round_flops
         self.clock = VirtualClock()
         self.timeline = Timeline()
+        self.telemetry.attach_clock(self.clock)
         self._program = round_program_for(method)
         self._queue = EventQueue()
         self._buffer: List[_Pending] = []  # arrivals awaiting aggregation
@@ -318,13 +328,22 @@ class AsyncFederatedEngine(FederatedEngine):
                 break  # nothing in flight and nothing to dispatch
             t = self._queue.peek_time()
             self.clock.advance_to(t)
-            for ev in self._queue.pop_until(t):
+            popped = self._queue.pop_until(t)
+            self.telemetry.counter("sim.events_popped", len(popped))
+            for ev in popped:
                 if isinstance(ev, ClientFinished):
                     p = self._pending.pop((ev.client_id, ev.dispatch_idx))
                     self._buffer.append(p)
                     self.timeline.record(
                         t, "arrive", client=ev.client_id, round_idx=p.version,
                         detail=f"stale={self.round_idx - p.version}",
+                    )
+                    # the client's whole virtual round (download + compute
+                    # + upload) on its own trace track
+                    self.telemetry.span_at(
+                        "client_round", p.t_dispatch, t,
+                        client=int(ev.client_id), version=int(p.version),
+                        staleness=int(self.round_idx - p.version),
                     )
                     idle.append(ev.client_id)
                     if (
@@ -333,17 +352,22 @@ class AsyncFederatedEngine(FederatedEngine):
                     ):
                         res = self._flush()
                         if log_every and res.round_idx % log_every == 0:
-                            print(
+                            self.telemetry.progress(
                                 f"[async/{self.method}] round {res.round_idx:4d} "
                                 f"loss {res.loss_before:.4f} "
                                 f"t={res.t_virtual:.1f}s "
-                                f"stale={res.staleness_mean:.2f}"
+                                f"stale={res.staleness_mean:.2f}",
+                                round=int(res.round_idx),
                             )
                 elif isinstance(ev, ClientDropped):
                     p = self._pending.pop((ev.client_id, ev.dispatch_idx))
                     self._release(p.version)
                     self.timeline.record(
                         t, "drop", client=ev.client_id, round_idx=p.version
+                    )
+                    self.telemetry.span_at(
+                        "client_dropped", p.t_dispatch, t,
+                        client=int(ev.client_id), version=int(p.version),
                     )
                     delay = self.fleet[ev.client_id].rejoin_delay_sec
                     if delay > 0:
@@ -429,6 +453,14 @@ class AsyncFederatedEngine(FederatedEngine):
         res.virtual_seconds = t - self._t_last_flush
         res.t_virtual = t
         res.staleness_mean = float(np.mean(staleness))
+        # inter-flush interval on the server's virtual track
+        self.telemetry.span_at(
+            "aggregate", self._t_last_flush, t,
+            round=int(res.round_idx), buffer_fill=len(arrivals),
+        )
+        self.telemetry.gauge(
+            "staleness_mean", res.staleness_mean, round=int(res.round_idx)
+        )
         self._t_last_flush = t
         _resave_checkpoint_if_due(self)
         ev = ServerAggregate(
@@ -577,10 +609,7 @@ class AsyncFederatedEngine(FederatedEngine):
         applied FedBuff-style instead: discounted deltas projected onto
         the current params, no rank adaptation this round.
         """
-        # repro-lint: disable=RPL003 -- wall-clock feeds only the
-        # RoundResult.seconds telemetry field; simulated time comes from
-        # the deterministic virtual clock, never from time.time
-        t0 = time.time()
+        t0 = perf_seconds()
         program, cfg = self._program, self.cfg
         K = len(arrivals)
         groups: dict = {}
@@ -590,9 +619,13 @@ class AsyncFederatedEngine(FederatedEngine):
         bytes_down = bytes_up = 0.0
         for v in sorted(groups):
             idxs = groups[v]
-            shared, outs, bdown, bup = self._run_group(
-                v, [arrivals[i] for i in idxs]
-            )
+            with self.telemetry.span(
+                "phase.client_step", version=int(v), group=len(idxs),
+                round=int(self.round_idx),
+            ):
+                shared, outs, bdown, bup = self._run_group(
+                    v, [arrivals[i] for i in idxs]
+                )
             shared_by_v[v] = shared
             for j, i in enumerate(idxs):
                 outs_by_i[i] = jax.tree.map(lambda x, j=j: x[j], outs)
@@ -615,14 +648,21 @@ class AsyncFederatedEngine(FederatedEngine):
                 round_idx=self.round_idx,
                 client_weights=jnp.asarray(w),
             )
-            agg = program.aggregate(shared_a, _tree_stack(pseudo), ctx)
+            with self.telemetry.span(
+                "phase.aggregate", round=int(self.round_idx), cohort=K
+            ):
+                agg = program.aggregate(shared_a, _tree_stack(pseudo), ctx)
             batches = jax.tree.map(
                 jnp.asarray, _tree_concat([a.batch for a in arrivals])
             )
-            new_params, metrics = program.finalize(
-                self._loss_fn, self.params, shared_a, agg, batches, ctx
-            )
-            metrics = jax.device_get(metrics)
+            with self.telemetry.span(
+                "phase.finalize", round=int(self.round_idx), cohort=K
+            ):
+                new_params, metrics = program.finalize(
+                    self._loss_fn, self.params, shared_a, agg, batches, ctx
+                )
+                metrics = jax.device_get(metrics)
+            pub_metrics = metrics
             loss_after = (
                 float(metrics["loss_after"]) if "loss_after" in metrics else None
             )
@@ -666,6 +706,7 @@ class AsyncFederatedEngine(FederatedEngine):
             )
             comm_eff = 0.0
             ranks = _collect_ranks(new_params)
+            pub_metrics = {}
         self.params = new_params
         res = RoundResult(
             round_idx=self.round_idx,
@@ -673,8 +714,7 @@ class AsyncFederatedEngine(FederatedEngine):
             loss_after=loss_after,
             comm_bytes_per_client=comm,
             ranks=ranks,
-            # repro-lint: disable=RPL003 -- telemetry only (see t0 above)
-            seconds=time.time() - t0,
+            seconds=perf_seconds() - t0,
             cohort_size=K,
             cohort=np.asarray([a.client for a in arrivals]),
             comm_bytes_per_client_effective=comm_eff,
@@ -683,6 +723,7 @@ class AsyncFederatedEngine(FederatedEngine):
             wire_codec=self.wire.name if self.wire is not None else "",
         )
         self.history.append(res)
+        self._publish_round(res, pub_metrics)
         self.round_idx += 1
         if (
             self.checkpoint_dir
@@ -734,6 +775,7 @@ class HierarchicalEngine:
         client_weights=None,
         flops_fn: Optional[Callable] = None,
         eval_fn=None,
+        telemetry=None,
     ):
         C = cfg.num_clients
         if not 1 <= num_edges <= C:
@@ -750,6 +792,8 @@ class HierarchicalEngine:
         self.round_idx = 0
         self.clock = VirtualClock()
         self.timeline = Timeline()
+        self.telemetry = telemetry if telemetry is not None else default_hub()
+        self.telemetry.attach_clock(self.clock)
         self.edge_cohorts = [
             np.asarray(c) for c in np.array_split(np.arange(C), num_edges)
         ]
@@ -762,7 +806,8 @@ class HierarchicalEngine:
             edge_profiles = [backhaul] * num_edges
         self.edge_profiles = list(edge_profiles)
         self.edge_wire = Wire(
-            edge_wire_codec if edge_wire_codec is not None else wire_codec
+            edge_wire_codec if edge_wire_codec is not None else wire_codec,
+            telemetry=self.telemetry,
         )
         self._cloud_bytes = 0.0
         self._loss_fn = loss_fn
@@ -782,6 +827,7 @@ class HierarchicalEngine:
                     dataclasses.replace(cfg, num_clients=len(cohort)),
                     method=method, wire_codec=wire_codec,
                     client_weights=cw, donate=False,
+                    telemetry=self.telemetry,
                 )
             )
         # cloud-side aggregation weight of each edge ∝ its population mass
@@ -863,6 +909,12 @@ class HierarchicalEngine:
                 self.timeline.record(
                     t0 + t_e, "edge_up", client=e, round_idx=self.round_idx
                 )
+                # one edge's full down → local rounds → up window, on the
+                # edge's own track (client = edge index)
+                self.telemetry.span_at(
+                    "edge_round", t0, t0 + t_e,
+                    client=int(e), round=int(self.round_idx),
+                )
             self.params = self._cloud_aggregate(up_list)
             dt = max(edge_times)
             self.clock.advance_to(t0 + dt)
@@ -888,10 +940,15 @@ class HierarchicalEngine:
                 self.clock.now, "aggregate", round_idx=res.round_idx,
                 detail=f"edges={self.num_edges}",
             )
+            self.telemetry.span_at(
+                "cloud_round", t0, self.clock.now,
+                round=int(res.round_idx), edges=int(self.num_edges),
+            )
             if log_every and res.round_idx % log_every == 0:
-                print(
+                self.telemetry.progress(
                     f"[hier/{self.method}] cloud round {res.round_idx:4d} "
-                    f"loss {res.loss_before:.4f} t={res.t_virtual:.1f}s"
+                    f"loss {res.loss_before:.4f} t={res.t_virtual:.1f}s",
+                    round=int(res.round_idx),
                 )
         return self.history
 

@@ -365,8 +365,15 @@ class Wire:
     executable.
     """
 
-    def __init__(self, codec: Union[str, WireCodec] = "identity"):
+    def __init__(self, codec: Union[str, WireCodec] = "identity", telemetry=None):
         self.codec = make_codec(codec)
+        # optional TelemetryHub: host-side roundtrips (the hier engine's
+        # edge↔cloud hop) emit encode/decode spans tagged with measured
+        # nbytes.  Traced roundtrips (inside a jitted round) skip
+        # instrumentation — a span there would fire at trace time only and
+        # its nbytes may be a tracer; the engines publish those bytes from
+        # the round metrics instead.
+        self.telemetry = telemetry
 
     @property
     def name(self) -> str:
@@ -381,6 +388,22 @@ class Wire:
         """
         if tree is None:
             return None, 0
+        hub = self.telemetry
+        if hub is not None and hub.enabled and not any(
+            isinstance(x, jax.core.Tracer) for x in jax.tree.leaves(tree)
+        ):
+            with hub.span(f"wire.{self.codec.name}.encode", payload=name):
+                msg = self.codec.encode(
+                    Payload(tensors=tree, name=name, batched=batched)
+                )
+            with hub.span(f"wire.{self.codec.name}.decode", payload=name):
+                decoded = self.codec.decode(msg).tensors
+            nbytes = self.codec.nbytes(msg)
+            hub.counter(
+                f"wire.{self.codec.name}.bytes",
+                float(jnp.asarray(nbytes)), payload=name,
+            )
+            return decoded, nbytes
         msg = self.codec.encode(Payload(tensors=tree, name=name, batched=batched))
         return self.codec.decode(msg).tensors, self.codec.nbytes(msg)
 

@@ -71,12 +71,19 @@ def use_kernels_for(policy: str):
             f"kernels policy must be one of {KERNEL_POLICIES}, got {policy!r}"
         )
     if policy == "interpret":
-        return "interpret"
-    if policy != "auto" or not on_tpu():
-        return False
-    from repro.utils import meshctx
+        flag = "interpret"
+    elif policy != "auto" or not on_tpu():
+        flag = False
+    else:
+        from repro.utils import meshctx
 
-    return meshctx.mesh() is None
+        flag = meshctx.mesh() is None
+    # lazy import: this module must stay importable (and statically
+    # interpretable by the RPL009 shape checker) without the hub machinery
+    from repro.telemetry import get_hub
+
+    get_hub().counter("kernels.dispatch", policy=policy, resolved=str(flag))
+    return flag
 
 
 def _interpret_mode(use_kernels) -> bool:

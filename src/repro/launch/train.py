@@ -55,6 +55,9 @@ FLAG_TO_FIELD = {
     "checkpoint_dir": "checkpoint.dir",
     "checkpoint_every": "checkpoint.every",
     "log_every": "log_every",
+    "telemetry": "telemetry.enabled",
+    "telemetry_dir": "telemetry.dir",
+    "telemetry_sinks": "telemetry.sinks",
 }
 
 
@@ -133,6 +136,16 @@ def _parser() -> argparse.ArgumentParser:
                     help="checkpoint cadence in rounds (needs "
                     "--checkpoint-dir; default 20)")
     ap.add_argument("--log-every", type=int)
+    ap.add_argument("--telemetry", action="store_true",
+                    help="structured telemetry: round/phase spans, metric "
+                    "streams, JSONL event log + Perfetto trace (see "
+                    "repro.telemetry; on ≡ off bit-for-bit)")
+    ap.add_argument("--telemetry-dir", type=str,
+                    help="output directory for the jsonl/perfetto sinks "
+                    "(events.jsonl, trace.json)")
+    ap.add_argument("--telemetry-sinks", type=str,
+                    help="comma list over console,memory,jsonl,perfetto "
+                    "(default console)")
     return ap
 
 

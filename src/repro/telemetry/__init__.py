@@ -1,0 +1,45 @@
+"""Structured telemetry: round/phase spans, metric streams, trace export.
+
+    from repro.telemetry import TelemetryHub, MemorySink
+
+    hub = TelemetryHub([MemorySink()])
+    with hub.span("client_step", round=3, client=7):
+        ...
+    hub.gauge("rank_mean", 12.0, round=3)
+
+Dual-clock aware (wall time through the one sanctioned
+:mod:`repro.telemetry.clock` shim, virtual time from an attached
+simulator clock), with pluggable sinks — JSONL event log, in-memory,
+console progress, Chrome/Perfetto ``trace_event`` export.  The hub reads
+run state and never writes it, so telemetry on ≡ off bit-for-bit.
+
+Validate or export an event log from the shell::
+
+    python -m repro.telemetry validate results/telemetry/events.jsonl
+    python -m repro.telemetry export results/telemetry/events.jsonl trace.json
+"""
+from repro.telemetry.clock import perf_seconds, wall_time  # noqa: F401
+from repro.telemetry.events import (  # noqa: F401
+    EVENT_KEYS,
+    EVENT_KINDS,
+    validate_event,
+    validate_jsonl,
+)
+from repro.telemetry.hub import (  # noqa: F401
+    NULL_HUB,
+    TelemetryHub,
+    default_hub,
+    get_hub,
+    hub_from_spec,
+    set_hub,
+)
+from repro.telemetry.perfetto import events_to_trace  # noqa: F401
+from repro.telemetry.sinks import (  # noqa: F401
+    SINK_NAMES,
+    ConsoleSink,
+    JsonlSink,
+    MemorySink,
+    PerfettoSink,
+    Sink,
+    make_sinks,
+)

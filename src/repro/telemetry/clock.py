@@ -1,0 +1,38 @@
+"""The one sanctioned wall-clock shim for library code.
+
+Same spec + same seed must be the same run bit-for-bit, so repro-lint's
+RPL003 bans wall-clock reads (``time.time`` and friends) everywhere under
+``src/repro`` *except this file* — the exemption is a rule path, not a
+suppression comment, so a stray ``time.time()`` anywhere else still fails
+the analyzer.  Everything that legitimately needs real time (span
+timestamps, ``RoundResult.seconds``, the JSONL event epoch) reads it
+through these two functions, which keeps the sanctioned surface greppable
+and the rest of the library provably deterministic.
+
+Two clocks, two jobs:
+
+- :func:`perf_seconds` — monotonic, for *durations* (``time.perf_counter``
+  never steps backwards under NTP adjustments, unlike ``time.time``, which
+  is exactly the bug this shim fixed in ``RoundResult.seconds``);
+- :func:`wall_time` — the epoch-anchored reading, for *labelling* (the
+  hub stamps one ``wall_epoch`` per run so traces can be correlated with
+  external logs; never used for durations).
+"""
+from __future__ import annotations
+
+import time
+
+
+def perf_seconds() -> float:
+    """Monotonic seconds from an arbitrary origin — duration measurement.
+
+    Differences of :func:`perf_seconds` readings are guaranteed
+    non-negative; absolute values are meaningless across processes.
+    """
+    return time.perf_counter()
+
+
+def wall_time() -> float:
+    """Seconds since the Unix epoch — timestamps for humans and log
+    correlation only, never for durations (it is not monotonic)."""
+    return time.time()

@@ -1,0 +1,170 @@
+"""Pluggable telemetry sinks: where hub events go.
+
+A sink is anything with ``emit(event) / flush() / close()``
+(:class:`Sink`).  Shipped sinks:
+
+- :class:`MemorySink` — append to a list (tests, programmatic readers);
+- :class:`JsonlSink` — one JSON object per line, the durable event log
+  the schema validator (``python -m repro.telemetry validate``) checks;
+- :class:`ConsoleSink` — renders ``progress`` events to stdout and drops
+  everything else: it is how the engines' old ad-hoc ``print()`` progress
+  lines survive byte-identically now that they are hub events;
+- :class:`PerfettoSink` — buffers events and writes a Chrome/Perfetto
+  ``trace_event`` JSON file on flush/close
+  (:func:`repro.telemetry.perfetto.events_to_trace`).
+
+Sinks are consumers only: they never mutate events and nothing reads them
+back into the run, which is half of the telemetry-on ≡ telemetry-off
+determinism invariant (the other half: the hub reads state, never
+advances RNG or the virtual clock).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import List, Optional, Protocol, runtime_checkable
+
+
+@runtime_checkable
+class Sink(Protocol):
+    """Event consumer: the hub fans every event out to each sink."""
+
+    def emit(self, event: dict) -> None:
+        ...
+
+    def flush(self) -> None:
+        ...
+
+    def close(self) -> None:
+        ...
+
+
+class MemorySink:
+    """Keep every event in a list — the test/programmatic sink."""
+
+    name = "memory"
+
+    def __init__(self):
+        self.events: List[dict] = []
+
+    def emit(self, event: dict) -> None:
+        self.events.append(event)
+
+    def flush(self) -> None:
+        pass
+
+    def close(self) -> None:
+        pass
+
+
+class ConsoleSink:
+    """Render ``progress`` events as plain lines; drop everything else.
+
+    ``stream=None`` resolves ``sys.stdout`` at emit time (not at
+    construction), so pytest's capsys and shell redirection both see the
+    output — exactly like the ``print()`` calls this sink replaced.
+    """
+
+    name = "console"
+
+    def __init__(self, stream=None):
+        self.stream = stream
+
+    def emit(self, event: dict) -> None:
+        if event["kind"] == "progress":
+            msg = event["attrs"].get("message", event["name"])
+            print(msg, file=self.stream or sys.stdout)
+
+    def flush(self) -> None:
+        (self.stream or sys.stdout).flush()
+
+    def close(self) -> None:
+        pass
+
+
+class JsonlSink:
+    """Append each event as one JSON line to ``path`` (parents created)."""
+
+    name = "jsonl"
+
+    def __init__(self, path):
+        self.path = str(path)
+        parent = os.path.dirname(self.path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        self._fh = open(self.path, "w")
+
+    def emit(self, event: dict) -> None:
+        self._fh.write(json.dumps(event) + "\n")
+
+    def flush(self) -> None:
+        self._fh.flush()
+
+    def close(self) -> None:
+        if not self._fh.closed:
+            self._fh.close()
+
+
+class PerfettoSink:
+    """Buffer events; write a Perfetto-loadable trace file on flush/close.
+
+    ``flush`` rewrites the whole file from the buffer (idempotent), so a
+    run that flushes per checkpoint always leaves a loadable trace even
+    if it dies before ``close``.
+    """
+
+    name = "perfetto"
+
+    def __init__(self, path):
+        self.path = str(path)
+        parent = os.path.dirname(self.path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        self.events: List[dict] = []
+
+    def emit(self, event: dict) -> None:
+        self.events.append(event)
+
+    def flush(self) -> None:
+        from repro.telemetry.perfetto import events_to_trace
+
+        with open(self.path, "w") as fh:
+            json.dump(events_to_trace(self.events), fh)
+            fh.write("\n")
+
+    def close(self) -> None:
+        self.flush()
+
+
+#: sink spec names accepted by :func:`make_sinks` / ``TelemetrySpec.sinks``
+SINK_NAMES = ("console", "memory", "jsonl", "perfetto")
+
+
+def make_sinks(spec: str, *, out_dir: Optional[str] = None) -> List[object]:
+    """Comma-separated sink spec → sink instances.
+
+    ``jsonl`` writes ``<out_dir>/events.jsonl`` and ``perfetto`` writes
+    ``<out_dir>/trace.json``; both require ``out_dir``.
+    """
+    sinks: List[object] = []
+    for name in [s.strip() for s in spec.split(",") if s.strip()]:
+        if name == "console":
+            sinks.append(ConsoleSink())
+        elif name == "memory":
+            sinks.append(MemorySink())
+        elif name in ("jsonl", "perfetto"):
+            if not out_dir:
+                raise ValueError(
+                    f"the {name!r} sink needs an output directory "
+                    f"(telemetry.dir)"
+                )
+            fname = "events.jsonl" if name == "jsonl" else "trace.json"
+            cls = JsonlSink if name == "jsonl" else PerfettoSink
+            sinks.append(cls(os.path.join(out_dir, fname)))
+        else:
+            raise ValueError(
+                f"unknown telemetry sink {name!r}; expected a comma list "
+                f"of {SINK_NAMES}"
+            )
+    return sinks

@@ -135,6 +135,52 @@ def test_rpl003_seeded_and_launch_are_clean(tmp_path):
     assert ok == []
 
 
+def test_rpl003_telemetry_clock_is_the_one_sanctioned_wall_clock(tmp_path):
+    # the shim itself may read the wall clock — it IS the sanctioned seam
+    ok = check(
+        tmp_path, "src/repro/telemetry/clock.py",
+        """
+        import time
+
+        def perf_seconds():
+            return time.perf_counter()
+
+        def wall_time():
+            return time.time()
+        """,
+        "RPL003",
+    )
+    assert ok == []
+    # the exemption is the one file, not the package: a sibling telemetry
+    # module timing on its own is still flagged
+    bad = check(
+        tmp_path, "src/repro/telemetry/hub.py",
+        """
+        import time
+
+        def stamp():
+            return time.perf_counter()
+        """,
+        "RPL003",
+    )
+    assert {f.rule for f in bad} == {"RPL003"}
+    # ... and so is any other library module (perf_counter included — the
+    # old suppression-comment escape hatch is gone; route through
+    # repro.telemetry.clock.perf_seconds instead)
+    bad = check(
+        tmp_path, "src/repro/fed/foo.py",
+        """
+        import time
+
+        def dur():
+            return time.perf_counter()
+        """,
+        "RPL003",
+    )
+    assert len(bad) == 1
+    assert "repro.telemetry.clock" in bad[0].hint
+
+
 def test_rpl004_flags_numpy_and_python_branching_in_traced_code(tmp_path):
     bad = check(
         tmp_path, "src/repro/core/stepper.py",
