@@ -1,0 +1,161 @@
+"""Serving benchmark: factor-resident decode vs dense, batching modes.
+
+What this group pins (the PR-10 acceptance criteria):
+
+  serve_decode_factor       f32 factor-resident decode — us/token, tok/s
+  serve_decode_dense        materialized U S Vᵀ baseline at equal output
+  serve_decode_int8         int8-factor decode — us/token, tok/s
+  serve_match_*             1 iff greedy tokens equal the factor path
+  serve_flops_*             cost-model decode FLOPs/token (factor < dense)
+  serve_bytes_*             resident parameter bytes (int8 < f32 < dense)
+  serve_latency_p50/p99     per-token decode latency percentiles (us)
+  serve_mode_continuous     seeded Poisson arrivals, continuous batching
+  serve_mode_static         same trace, static waves — more decode steps
+
+Rows follow the harness CSV ``name,us_per_call,derived``.  Everything is
+constructed through ``serve(spec)`` (RPL001/RPL002) and every arrival
+trace is seeded — reruns are bit-deterministic in tokens and step counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def _spec(quantize="none", materialize=False, mode="continuous", *,
+          smoke: bool):
+    from repro.api import ExperimentSpec, ModelSpec, ServeSpec
+
+    return ExperimentSpec(
+        name=f"bench-serve-{quantize}{'-dense' if materialize else ''}",
+        model=ModelSpec(kind="lm", preset="llm-tiny", smoke=smoke),
+        serve=ServeSpec(
+            quantize=quantize,
+            materialize=materialize,
+            mode=mode,
+            max_batch=2 if smoke else 4,
+            max_prompt=16 if smoke else 32,
+            prompt_bucket=8,
+            max_new_tokens=8 if smoke else 24,
+        ),
+    )
+
+
+def _prompts(spec, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        rng.integers(1, 256, size=int(rng.integers(4, spec.serve.max_prompt)))
+        .astype(np.int32)
+        for _ in range(n)
+    ]
+
+
+def _poisson_trace(spec, n, mean_gap_steps, seed=0):
+    """Seeded Poisson arrival trace in decode-step units (deterministic,
+    unlike wall-clock arrival): exponential inter-arrival gaps, varied
+    per-request decode budgets so static waves wait for their slowest."""
+    from repro.serve import Request
+
+    rng = np.random.default_rng(seed)
+    steps = np.floor(
+        rng.exponential(scale=mean_gap_steps, size=n).cumsum()
+    ).astype(int)
+    budgets = rng.integers(2, spec.serve.max_new_tokens + 1, size=n)
+    prompts = _prompts(spec, n, seed=seed + 1)
+    return [
+        Request(rid=i, tokens=prompts[i], max_new_tokens=int(budgets[i]),
+                arrival_step=int(steps[i]))
+        for i in range(n)
+    ]
+
+
+def _decode_row(name, comps):
+    toks = sum(len(c.tokens) for c in comps)
+    span = sum(c.prefill_s + c.decode_s for c in comps)
+    us_per_tok = span / max(toks, 1) * 1e6
+    print(f"{name},{us_per_tok:.1f},{toks / max(span, 1e-9):.1f}")
+    return toks
+
+
+def serve_paths(*, smoke: bool = False) -> None:
+    """Factorized vs dense vs quantized decode at equal greedy output."""
+    from repro.api import serve
+    from repro.serve import decode_matmul_flops, resident_bytes
+
+    n_req = 3 if smoke else 8
+    base = _spec(smoke=smoke)
+    factor_sess = serve(base)
+    prompts = _prompts(base, n_req)
+
+    factor_sess.generate(prompts)  # warm the executables before timing
+    f_outs, f_comps = factor_sess.generate(prompts)
+    _decode_row("serve_decode_factor", f_comps)
+
+    per_tok = np.concatenate([
+        np.full(max(len(c.tokens), 1), c.decode_s / max(len(c.tokens), 1))
+        for c in f_comps
+    ]) * 1e6
+    p50, p99 = np.percentile(per_tok, [50, 99])
+    print(f"serve_latency_p50,{p50:.1f},0")
+    print(f"serve_latency_p99,{p99:.1f},0")
+
+    dense_sess = serve(_spec(materialize=True, smoke=smoke))
+    dense_sess.generate(prompts)
+    d_outs, d_comps = dense_sess.generate(prompts)
+    _decode_row("serve_decode_dense", d_comps)
+    match = all(
+        np.array_equal(a, b) for a, b in zip(f_outs, d_outs)
+    )
+    print(f"serve_match_factor_vs_dense,0.0,{int(match)}")
+
+    int8_sess = serve(_spec(quantize="int8", smoke=smoke))
+    int8_sess.generate(prompts)
+    _, q_comps = int8_sess.generate(prompts)
+    _decode_row("serve_decode_int8", q_comps)
+
+    fp = factor_sess.engine.params
+    flops_factor = decode_matmul_flops(fp, factor_resident=True)
+    flops_dense = decode_matmul_flops(fp, factor_resident=False)
+    print(f"serve_flops_factor,0.0,{flops_factor:.0f}")
+    print(f"serve_flops_dense,0.0,{flops_dense:.0f}")
+    assert flops_factor < flops_dense, "factor decode must cost fewer FLOPs"
+
+    b_f32 = resident_bytes(fp)
+    b_int8 = resident_bytes(int8_sess.engine.params)
+    b_dense = resident_bytes(dense_sess.engine.params)
+    print(f"serve_bytes_f32,0.0,{b_f32}")
+    print(f"serve_bytes_int8,0.0,{b_int8}")
+    print(f"serve_bytes_dense,0.0,{b_dense}")
+    assert b_int8 < b_f32, "int8 factors must shrink resident bytes"
+
+
+def serve_batching(*, smoke: bool = False) -> None:
+    """Continuous vs static batching under one seeded Poisson trace."""
+    from repro.api import serve
+    from repro.telemetry.clock import perf_seconds
+
+    n_req = 4 if smoke else 12
+    gap = 2 if smoke else 3
+    for mode in ("continuous", "static"):
+        spec = _spec(mode=mode, smoke=smoke)
+        sess = serve(spec)
+        sess.generate(_prompts(spec, 2))  # warm executables off the clock
+        trace = _poisson_trace(spec, n_req, gap)
+        t0 = perf_seconds()
+        comps = sess.scheduler.run(trace)
+        wall = perf_seconds() - t0
+        toks = sum(len(c.tokens) for c in comps)
+        print(
+            f"serve_mode_{mode},{wall / max(toks, 1) * 1e6:.1f},"
+            f"{sess.scheduler.decode_steps}"
+        )
+
+
+if __name__ == "__main__":
+    import sys
+
+    smoke = "--smoke" in sys.argv
+    print("name,us_per_call,derived")
+    serve_paths(smoke=smoke)
+    serve_batching(smoke=smoke)

@@ -12,6 +12,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   roofline_*   dry-run roofline terms (requires results/dryrun/*.json)
   lint_*       repro-lint analyzer cost (dataflow tier runs on every PR)
   telemetry_*  telemetry hub overhead: disabled vs enabled vs jsonl sink
+  serve_*      serving: factor-resident vs dense decode, continuous batching
 
 Besides printing, every group persists its rows as a per-PR artifact
 ``<out-dir>/BENCH_<group>.json`` (schema: ``bench``, ``rows``,
@@ -89,7 +90,7 @@ def main() -> None:
     ap.add_argument(
         "--only", type=str, default=None,
         help="comma-separated subset: lsq,costs,cv,wire,kernels,sim,"
-        "ablation,roofline,lint,telemetry",
+        "ablation,roofline,lint,telemetry,serve",
     )
     ap.add_argument(
         "--out-dir", type=str, default="results",
@@ -169,6 +170,12 @@ def main() -> None:
 
         with _record("telemetry", args.out_dir, git_sha):
             telemetry_overhead(rounds=3 if args.smoke else 6)
+    if want("serve"):
+        from benchmarks.bench_serve import serve_batching, serve_paths
+
+        with _record("serve", args.out_dir, git_sha):
+            serve_paths(smoke=args.smoke)
+            serve_batching(smoke=args.smoke)
     sys.stdout.flush()
 
 

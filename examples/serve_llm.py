@@ -1,15 +1,84 @@
-"""Batched-serving example (4th example app).
+"""Serving example: train two FeDLRT rounds, then serve the result.
 
-Spins up the BatchedServer on a reduced registry architecture and decodes
-a batch of random prompts — prefill + KV-cached greedy decode, the same
-`serve_step` the decode dry-run shapes lower on the production mesh.
+The whole train→checkpoint→serve loop is one declarative
+:class:`repro.api.ExperimentSpec`: ``build(spec).run()`` trains and
+checkpoints, ``serve(spec)`` stands the same spec up as a continuous-
+batching, factor-resident decode stack (``U S Vᵀ`` is never
+materialized; quantization / rank slicing are spec knobs).  Prefer a
+config file for real use:
 
-Run:  PYTHONPATH=src python examples/serve_llm.py --arch rwkv6-7b --smoke
+Run:  PYTHONPATH=src python examples/serve_llm.py
+      PYTHONPATH=src python examples/serve_llm.py --quantize int8 --skip-train
+      PYTHONPATH=src python -m repro.api serve examples/configs/serve_lowrank.toml
 """
-import sys
+import argparse
+import dataclasses
+import tempfile
 
-from repro.launch.serve import main
+from repro.api import (
+    CheckpointSpec,
+    DataSpec,
+    ExperimentSpec,
+    FedSpec,
+    ModelSpec,
+    ServeSpec,
+    build,
+    serve,
+)
+from repro.launch.serve import summarize, synthetic_requests
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quantize", choices=("none", "int8", "bf16"),
+                    default="none")
+    ap.add_argument("--mode", choices=("continuous", "static"),
+                    default="continuous")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--skip-train", action="store_true",
+                    help="serve fresh seed-initialized params")
+    args = ap.parse_args(argv)
+
+    spec = ExperimentSpec(
+        name="serve-llm-example",
+        rounds=2,
+        model=ModelSpec(kind="lm", preset="llm-tiny"),
+        data=DataSpec(kind="token_stream", tokens_per_client=2048, batch=8),
+        fed=FedSpec(method="fedlrt", clients=2, local_steps=2),
+        serve=ServeSpec(
+            quantize=args.quantize,
+            rank_slice=args.quantize != "none",
+            mode=args.mode,
+            max_batch=3,
+            max_prompt=32,
+            prompt_bucket=8,
+            max_new_tokens=16,
+        ),
+    )
+
+    if args.skip_train:
+        session = serve(spec)
+    else:
+        with tempfile.TemporaryDirectory() as ckpt_dir:
+            spec = dataclasses.replace(
+                spec,
+                checkpoint=CheckpointSpec(dir=ckpt_dir, every=1),
+                serve=dataclasses.replace(spec.serve, checkpoint=ckpt_dir),
+            )
+            exp = build(spec)
+            hist = exp.run()
+            print(f"trained {len(hist)} rounds: "
+                  f"loss {hist[0].loss_before:.4f} → {hist[-1].loss_before:.4f}")
+            session = serve(spec)  # reloads the round_2 checkpoint
+
+    print(session.describe())
+    comps = session.run(synthetic_requests(
+        spec, args.requests, spread=args.mode == "continuous",
+    ))
+    print(summarize(comps))
+    print("first sequence:", comps[0].tokens[:16].tolist())
+    return 0
+
 
 if __name__ == "__main__":
-    args = sys.argv[1:] or ["--preset", "llm-tiny", "--new-tokens", "16"]
-    main(args)
+    main()

@@ -54,14 +54,17 @@ ENGINE_NAMES = {
     "AsyncFederatedEngine",
     "HierarchicalEngine",
     "make_sim_engine",
+    "ServeEngine",
+    "ContinuousScheduler",
 }
 
-#: files allowed to construct engines: the build() seam and the engine
-#: modules themselves (internal composition, e.g. hier wraps sync)
+#: files allowed to construct engines: the build()/serve() seams and the
+#: engine modules themselves (internal composition, e.g. hier wraps sync)
 ENGINE_HOMES = (
     ("api", "experiment.py"),
     ("fed", "engine.py"),
     ("fed", "sim", "engines.py"),
+    ("serve",),
 )
 
 
@@ -72,15 +75,17 @@ class NoAdHocEngines(Rule):
     PR 5 made ``build(spec)`` the single engine factory so that cohort
     policy, wire codecs, checkpoint stamping and weighting can never be
     silently dropped by a hand-rolled engine.  Constructing an engine
-    anywhere else reopens exactly that hole.
+    anywhere else reopens exactly that hole.  The serving stack
+    (``ServeEngine`` / ``ContinuousScheduler``) follows the same rule
+    with ``api.experiment.serve()`` as its seam.
     """
 
     id = "RPL001"
-    title = "engine constructed outside api.experiment.build()"
+    title = "engine constructed outside api.experiment.build()/serve()"
     severity = "error"
     hint = (
         "describe the scenario as an ExperimentSpec and call "
-        "repro.api.build(spec)"
+        "repro.api.build(spec) / repro.api.serve(spec)"
     )
 
     def applies_to(self, info: PathInfo) -> bool:

@@ -12,7 +12,12 @@ Or from the shell::
     python -m repro.api run examples/configs/async_straggler.toml \
         --set engine.buffer_size=4
 """
-from repro.api.experiment import Experiment, build  # noqa: F401
+from repro.api.experiment import (  # noqa: F401
+    Experiment,
+    ServeSession,
+    build,
+    serve,
+)
 from repro.api.serialization import (  # noqa: F401
     content_hash,
     toml_dumps,
@@ -26,6 +31,7 @@ from repro.api.spec import (  # noqa: F401
     FedSpec,
     ModelSpec,
     ParticipationSpec,
+    ServeSpec,
     SimSpec,
     TelemetrySpec,
     WireSpec,

@@ -1,9 +1,11 @@
-"""CLI for spec files:  python -m repro.api {validate,describe,run} ...
+"""CLI for spec files:  python -m repro.api {validate,describe,run,serve} ...
 
 ``validate`` parses + validates spec files and prints their content
 hashes (the CI ``config-smoke`` job's first gate); ``describe`` renders a
 built experiment without running it; ``run`` builds and trains, with the
-same dotted ``--set section.key=value`` overrides the train CLI accepts.
+same dotted ``--set section.key=value`` overrides the train CLI accepts;
+``serve`` stands up the spec's ``[serve]`` section over seeded synthetic
+prompts and prints throughput/latency stats.
 """
 import argparse
 import sys
@@ -38,6 +40,14 @@ def main(argv=None):
                        help="override spec.rounds")
     p_run.add_argument("--log-every", type=int, default=None,
                        help="override spec.log_every")
+
+    p_srv = sub.add_parser("serve", help="build a spec's serving stack and "
+                           "drive synthetic requests through it")
+    p_srv.add_argument("path")
+    p_srv.add_argument("--set", dest="sets", action="append", default=[],
+                       metavar="SECTION.KEY=VALUE")
+    p_srv.add_argument("--requests", type=int, default=8,
+                       help="number of synthetic prompts")
     args = ap.parse_args(argv)
 
     if args.cmd == "validate":
@@ -52,9 +62,14 @@ def main(argv=None):
                 print(f"{path}: ok [spec {spec.spec_hash()}]")
         return 0 if ok else 1
 
+    spec = _load(args.path, args.sets)
+    if args.cmd == "serve":
+        from repro.launch.serve import run_session
+
+        return run_session(spec, num_requests=args.requests)
+
     from repro.api.experiment import build
 
-    spec = _load(args.path, args.sets)
     if args.cmd == "describe":
         print(build(spec).describe())
         return 0

@@ -179,6 +179,12 @@ class Experiment:
     def comm_total_bytes(self) -> float:
         return self.engine.comm_total_bytes()
 
+    def serve(self) -> "ServeSession":
+        """Serve this experiment's *current* params in-process — the
+        train→serve loop without a checkpoint round-trip (the spec's
+        ``serve.checkpoint`` is ignored; everything else applies)."""
+        return serve(self.spec, params=self.engine.params)
+
     def describe(self) -> str:
         s = self.spec
         part = s.participation.to_string()
@@ -220,6 +226,15 @@ class Experiment:
             if s.telemetry.enabled
             else "(off)"
         )
+        srv = s.serve
+        srv_line = f"{srv.mode}  batch={srv.max_batch}  " \
+            f"cache={srv.max_prompt}+{srv.max_new_tokens}"
+        if srv.quantize != "none":
+            srv_line += f"  quantize={srv.quantize}"
+        if srv.rank_slice:
+            srv_line += "  rank_slice"
+        if srv.materialize:
+            srv_line += "  materialize"
         lines = [
             f"experiment {s.name or '(unnamed)'}  [spec {s.spec_hash()}]",
             f"  task           {s.model.kind}: {self.task.description}",
@@ -237,6 +252,154 @@ class Experiment:
             f"  sim            {s.sim.profile or '(no virtual clock)'}",
             f"  checkpoint     {ckpt}",
             f"  telemetry      {tel}",
+            f"  serve          {srv_line}",
             f"  rounds         {s.rounds}  (seed {s.seed})",
         ]
         return "\n".join(lines)
+
+
+def serve(spec: ExperimentSpec, *, params=None) -> "ServeSession":
+    """Resolve a validated spec into a running :class:`ServeSession`.
+
+    The serving twin of :func:`build` — and, like it, the one place the
+    serving stack is constructed (RPL001 covers ``ServeEngine`` /
+    ``ContinuousScheduler`` the way it covers the training engines).
+    Params come from, in priority order: the explicit ``params`` argument
+    (``Experiment.serve()``), the checkpoint named by
+    ``spec.serve.checkpoint`` (a ``round_*.npz`` file or a directory whose
+    latest round wins — no spec-hash refusal here: serving is read-only,
+    and re-serving an old checkpoint under a tweaked serve section is
+    legitimate), or fresh ``spec.seed`` initialization (smoke runs).
+    """
+    import jax
+
+    from repro.api.tasks import lm_model_config
+    from repro.models import build_model
+    from repro.serve import ContinuousScheduler, ServeEngine
+    from repro.serve.quantize import (
+        materialize_params,
+        quantize_params,
+        rank_slice_params,
+    )
+    from repro.telemetry import hub_from_spec, set_hub
+
+    if spec.model.kind != "lm":
+        raise ValueError(
+            f"serving decodes tokens; model.kind={spec.model.kind!r} has "
+            f"no decode path (use kind='lm')"
+        )
+    hub = hub_from_spec(
+        spec.telemetry,
+        meta={"spec_hash": spec.spec_hash(), "spec_name": spec.name},
+    )
+    set_hub(hub)
+    cfg = lm_model_config(spec.model)
+    model = build_model(cfg)
+    sv = spec.serve
+
+    if params is None:
+        if sv.checkpoint is not None:
+            from repro.checkpoint import load_checkpoint
+
+            path = sv.checkpoint
+            if os.path.isdir(path):
+                ckpts = sorted(glob.glob(os.path.join(path, "round_*.npz")))
+                if not ckpts:
+                    raise FileNotFoundError(
+                        f"no round_*.npz checkpoints under {path!r}"
+                    )
+                path = ckpts[-1]
+            params, _meta = load_checkpoint(path)
+        else:
+            params, _ = model.init(jax.random.PRNGKey(spec.seed))
+
+    # at-rest transforms: slice first (smaller buffers to quantize), then
+    # compress or densify — ServeSpec validation rejects the combinations
+    # that don't compose
+    if sv.rank_slice:
+        params = rank_slice_params(params)
+    if sv.materialize:
+        params = materialize_params(params)
+    elif sv.quantize != "none":
+        params = quantize_params(params, sv.quantize)
+
+    engine = ServeEngine(
+        model, params,
+        max_batch=sv.max_batch,
+        max_prompt=sv.max_prompt,
+        prompt_bucket=sv.prompt_bucket,
+        max_new_tokens=sv.max_new_tokens,
+        temperature=sv.temperature,
+        seed=spec.seed,
+        telemetry=hub,
+    )
+    scheduler = ContinuousScheduler(
+        engine, max_queue=sv.max_queue, mode=sv.mode, telemetry=hub,
+    )
+    return ServeSession(spec=spec, engine=engine, scheduler=scheduler, hub=hub)
+
+
+@dataclasses.dataclass
+class ServeSession:
+    """A built serving stack: spec + engine + scheduler.
+
+    ``submit``/``run`` forward to the scheduler; ``generate`` is the
+    convenience surface the CLI and examples use (prompts in, generated
+    token arrays + per-request :class:`repro.serve.Completion` stats out).
+    """
+
+    spec: ExperimentSpec
+    engine: object
+    scheduler: object
+    hub: object = None
+
+    def submit(self, request) -> None:
+        self.scheduler.submit(request)
+
+    def run(self, requests) -> List:
+        try:
+            return self.scheduler.run(requests)
+        finally:
+            if self.hub is not None:
+                self.hub.flush()
+
+    def generate(self, prompts, *, max_new_tokens=None, arrival_steps=None):
+        """Serve a list of 1-D token prompts; returns
+        ``(outputs, completions)`` with outputs ordered like ``prompts``."""
+        import numpy as np
+
+        from repro.serve import Request
+
+        sv = self.spec.serve
+        arrivals = arrival_steps or [0] * len(prompts)
+        reqs = [
+            Request(
+                rid=i,
+                tokens=np.asarray(p, np.int32),
+                max_new_tokens=max_new_tokens,
+                eos_id=sv.eos_id,
+                arrival_step=int(step),
+            )
+            for i, (p, step) in enumerate(zip(prompts, arrivals))
+        ]
+        comps = self.run(reqs)
+        return [c.tokens for c in comps], comps
+
+    def describe(self) -> str:
+        s, sv = self.spec, self.spec.serve
+        src = sv.checkpoint or "(fresh init)"
+        quant = sv.quantize if not sv.materialize else "materialized-dense"
+        return "\n".join([
+            f"serve {s.name or '(unnamed)'}  [spec {s.spec_hash()}]",
+            f"  model     {s.model.preset or s.model.arch}"
+            + ("  (smoke)" if s.model.smoke else ""),
+            f"  params    {src}  quantize={quant}"
+            + ("  rank_slice" if sv.rank_slice else ""),
+            f"  batching  {sv.mode}  slots={sv.max_batch}  "
+            f"queue≤{sv.max_queue}",
+            f"  shapes    prompt≤{sv.max_prompt} (bucket {sv.prompt_bucket})"
+            f"  decode≤{sv.max_new_tokens}  cache={sv.cache_len}",
+            f"  sampling  temperature={sv.temperature:g}"
+            + (f"  eos={sv.eos_id}" if sv.eos_id is not None else "")
+            + f"  (seed {s.seed})",
+        ])

@@ -386,6 +386,89 @@ class TelemetrySpec:
             )
 
 
+@dataclasses.dataclass(frozen=True)
+class ServeSpec:
+    """How the trained factorized model is served (:mod:`repro.serve`).
+
+    ``checkpoint`` names a ``round_*.npz`` file or a checkpoint directory
+    (latest round wins); ``None`` serves fresh ``seed``-initialized params
+    — useful for smoke runs, pointless in production.  ``quantize`` picks
+    the at-rest factor compression (``int8`` per-column affine / ``bf16``
+    downcast), ``rank_slice`` drops exactly-zero inactive columns at load,
+    and ``materialize`` densifies ``U S Vᵀ`` — the debug/baseline path,
+    mutually exclusive with the compression knobs.  ``mode`` selects
+    continuous batching or the static-wave baseline.  Prompts are
+    right-padded to ``prompt_bucket`` multiples (one prefill executable
+    per bucket), and the decode executable is fixed at
+    ``(max_batch, max_prompt + max_new_tokens)``.
+    """
+
+    checkpoint: Optional[str] = None
+    quantize: str = "none"
+    rank_slice: bool = False
+    materialize: bool = False
+    mode: str = "continuous"
+    max_batch: int = 4
+    max_queue: int = 64
+    max_prompt: int = 64
+    prompt_bucket: int = 16
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+
+    def __post_init__(self):
+        from repro.serve.quantize import QUANT_MODES
+        from repro.serve.scheduler import SCHED_MODES
+
+        if self.quantize not in QUANT_MODES:
+            raise ValueError(
+                f"serve.quantize must be one of {QUANT_MODES}, "
+                f"got {self.quantize!r}"
+            )
+        if self.mode not in SCHED_MODES:
+            raise ValueError(
+                f"serve.mode must be one of {SCHED_MODES}, got {self.mode!r}"
+            )
+        for name in (
+            "max_batch", "max_queue", "max_prompt", "prompt_bucket",
+            "max_new_tokens",
+        ):
+            if getattr(self, name) < 1:
+                raise ValueError(f"serve.{name} must be >= 1")
+        if self.max_queue < self.max_batch:
+            raise ValueError(
+                f"serve.max_queue ({self.max_queue}) must hold at least one "
+                f"full slot cohort (serve.max_batch={self.max_batch})"
+            )
+        if self.max_prompt % self.prompt_bucket:
+            raise ValueError(
+                f"serve.prompt_bucket ({self.prompt_bucket}) must divide "
+                f"serve.max_prompt ({self.max_prompt}) — prefill "
+                f"executables are compiled per bucket"
+            )
+        if self.temperature < 0:
+            raise ValueError("serve.temperature must be >= 0")
+        if self.eos_id is not None and self.eos_id < 0:
+            raise ValueError("serve.eos_id must be a token id (>= 0)")
+        if self.materialize and self.quantize != "none":
+            raise ValueError(
+                f"serve.materialize=True densifies U S Vᵀ; "
+                f"serve.quantize={self.quantize!r} compresses the factors "
+                f"it would destroy — pick one"
+            )
+        if self.materialize and self.rank_slice:
+            raise ValueError(
+                "serve.rank_slice drops inactive factor columns; it has "
+                "nothing to act on once serve.materialize densifies — "
+                "unset one"
+            )
+
+    @property
+    def cache_len(self) -> int:
+        """Per-slot KV budget: longest admissible prompt + decode room."""
+        return self.max_prompt + self.max_new_tokens
+
+
 def _default_model():
     return ModelSpec(preset="llm-tiny")
 
@@ -413,6 +496,7 @@ class ExperimentSpec:
     sim: SimSpec = field(default_factory=SimSpec)
     checkpoint: CheckpointSpec = field(default_factory=CheckpointSpec)
     telemetry: TelemetrySpec = field(default_factory=TelemetrySpec)
+    serve: ServeSpec = field(default_factory=ServeSpec)
 
     # -- validation --------------------------------------------------------
 

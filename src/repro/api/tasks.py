@@ -109,20 +109,29 @@ def _partition(partition: str, labels, n: int, clients: int, seed: int):
 # ---------------------------------------------------------------------------
 
 
-def _build_lm(spec) -> Task:
-    import jax
-
+def lm_model_config(m):
+    """Resolve a ModelSpec's lm architecture (preset/arch × smoke ×
+    kernels) — shared by the task builder and the serving layer, so
+    train and serve agree on shapes by construction."""
     from repro.configs import get_config
-    from repro.data import FederatedBatcher, make_token_stream, partition_sizes
-    from repro.models import build_model
     from repro.models.config import reduced
 
-    m, d = spec.model, spec.data
     cfg = PRESETS[m.preset] if m.preset is not None else get_config(m.arch)
     if m.smoke:
         cfg = reduced(cfg)
     if m.kernels != cfg.kernels:
         cfg = dataclasses.replace(cfg, kernels=m.kernels)
+    return cfg
+
+
+def _build_lm(spec) -> Task:
+    import jax
+
+    from repro.data import FederatedBatcher, make_token_stream, partition_sizes
+    from repro.models import build_model
+
+    m, d = spec.model, spec.data
+    cfg = lm_model_config(m)
     model = build_model(cfg)
     params, _ = model.init(jax.random.PRNGKey(spec.seed))
     n_params = sum(x.size for x in jax.tree.leaves(params))

@@ -286,6 +286,26 @@ def client_step_flops(params, batch_tokens: int) -> float:
     return total
 
 
+def lowrank_decode_flops(n_in: int, n_out: int, r: int, *, gather: bool = False) -> float:
+    """Per-token matmul FLOPs of one factor-resident linear in the decode
+    path: ``x(1×n_in)·U + (xU)·S + (xUS)·Vᵀ = 2(n_in·r + r² + r·n_out)``.
+
+    ``gather=True`` prices an embedding factor: the U row is gathered, not
+    multiplied, so only the ``S`` / ``Vᵀ`` terms remain.
+    """
+    flops = 2.0 * (r * r + r * n_out)
+    if not gather:
+        flops += 2.0 * n_in * r
+    return flops
+
+
+def dense_decode_flops(n_in: int, n_out: int, *, gather: bool = False) -> float:
+    """Per-token FLOPs of the same linear once ``U S Vᵀ`` is materialized:
+    ``2·n_in·n_out`` — or zero for an embedding (a dense embed is a pure
+    gather with no matmul at all)."""
+    return 0.0 if gather else 2.0 * n_in * n_out
+
+
 def factor_storage_bytes(params) -> int:
     return sum(
         (f.U.size + f.S.size + f.V.size) * f.U.dtype.itemsize

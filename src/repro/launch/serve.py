@@ -1,163 +1,131 @@
-"""Batched serving driver: prefill + greedy/temperature decode loop.
+"""Serving CLI — a thin layer over ``repro.api.experiment.serve``.
 
-Completes the serving side of the framework: the dry-run proves the
-decode shapes lower on the production mesh; this driver actually runs
-them (CPU-scale here, same code on a mesh).  Requests are padded into a
-fixed batch, prefilled once, then decoded step-by-step with the ring/KV
-cache from ``Model.serve_step`` — per-sequence stop handling included.
+The legacy flag surface (``--preset``/``--arch``/``--batch``/…) maps
+one-to-one onto a :class:`repro.api.spec.ServeSpec`, the way the train
+CLI's flags map onto an :class:`ExperimentSpec`: every invocation builds
+the spec first, so ``serve(spec)`` stays the single serving construction
+site and legacy flags ≡ spec by construction.
 
     PYTHONPATH=src python -m repro.launch.serve --preset llm-tiny --new-tokens 32
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --smoke
+    PYTHONPATH=src python -m repro.launch.serve --preset llm-tiny --quantize int8
+    PYTHONPATH=src python -m repro.api serve examples/configs/serve_lowrank.toml
+
+All timing comes back from the scheduler's completions, which stamp
+phases with ``repro.telemetry.clock.perf_seconds`` (RPL003) — this module
+does no clock reads of its own.
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import time
-from typing import List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
-from repro.models import build_model
-from repro.models.config import ModelConfig, reduced
+
+def synthetic_requests(spec, num_requests: int, *, spread: bool = False):
+    """Seeded synthetic prompt set for a spec: lengths in
+    ``[4, max_prompt]``, ids in the model vocab.  ``spread=True`` staggers
+    arrivals (one request every other decode step) to exercise continuous
+    admission; otherwise everything arrives at step 0."""
+    from repro.api.tasks import lm_model_config
+    from repro.serve import Request
+
+    cfg = lm_model_config(spec.model)
+    rng = np.random.default_rng(spec.seed)
+    reqs = []
+    for i in range(num_requests):
+        length = int(rng.integers(4, spec.serve.max_prompt + 1))
+        reqs.append(Request(
+            rid=i,
+            tokens=rng.integers(1, cfg.vocab_size, size=length).astype(np.int32),
+            eos_id=spec.serve.eos_id,
+            arrival_step=2 * i if spread else 0,
+        ))
+    return reqs
 
 
-@dataclasses.dataclass
-class ServeStats:
-    prefill_s: float
-    decode_s: float
-    tokens_generated: int
+def summarize(completions) -> str:
+    """One-line throughput/latency summary of a completion list."""
+    toks = sum(len(c.tokens) for c in completions)
+    span = sum(c.prefill_s + c.decode_s for c in completions)
+    per_tok = np.concatenate([
+        np.full(max(len(c.tokens), 1), c.decode_s / max(len(c.tokens), 1))
+        for c in completions
+    ])
+    p50, p99 = np.percentile(per_tok, [50, 99])
+    return (
+        f"{len(completions)} requests, {toks} tokens; "
+        f"{toks / max(span, 1e-9):.1f} tok/s aggregate; "
+        f"per-token latency p50 {p50 * 1e3:.2f} ms / p99 {p99 * 1e3:.2f} ms"
+    )
 
-    @property
-    def tokens_per_s(self) -> float:
-        return self.tokens_generated / max(self.decode_s, 1e-9)
 
+def run_session(spec, num_requests: int = 8) -> int:
+    """Build the spec's serving stack, drive synthetic requests, print
+    stats.  Shared by ``python -m repro.api serve`` and this module's
+    legacy-flag ``main``."""
+    from repro.api.experiment import serve
 
-class BatchedServer:
-    """Static-batch server over a Model: prefill once, decode N tokens."""
-
-    def __init__(self, model, params, *, max_new_tokens: int = 32,
-                 temperature: float = 0.0, seed: int = 0):
-        self.model = model
-        self.params = params
-        self.max_new_tokens = max_new_tokens
-        self.temperature = temperature
-        self.key = jax.random.PRNGKey(seed)
-        self._prefill = jax.jit(
-            lambda p, b, cl: model.serve_prefill(p, b, cache_len=cl),
-            static_argnums=(2,),
-        )
-        self._step = jax.jit(model.serve_step)
-
-    def _sample(self, logits: jax.Array) -> jax.Array:
-        if self.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        self.key, k = jax.random.split(self.key)
-        return jax.random.categorical(k, logits / self.temperature).astype(
-            jnp.int32
-        )
-
-    def generate(
-        self,
-        prompts: List[np.ndarray],
-        *,
-        extra_inputs: Optional[dict] = None,
-        eos_id: Optional[int] = None,
-    ):
-        """prompts: list of 1-D int token arrays (right-padded internally)."""
-        B = len(prompts)
-        L = max(len(p) for p in prompts)
-        cfg = self.model.cfg
-        pad = np.zeros((B, L), np.int32)
-        for i, p in enumerate(prompts):
-            pad[i, L - len(p):] = p  # left-pad so last position is real
-        batch = {"tokens": jnp.asarray(pad)}
-        if extra_inputs:
-            batch.update(extra_inputs)
-
-        cache_len = L + cfg.vision_tokens + self.max_new_tokens
-        t0 = time.perf_counter()
-        logits, cache = self._prefill(self.params, batch, cache_len)
-        logits.block_until_ready()
-        t_prefill = time.perf_counter() - t0
-
-        outs = np.zeros((B, self.max_new_tokens), np.int32)
-        done = np.zeros(B, bool)
-        t0 = time.perf_counter()
-        tok = self._sample(logits)
-        for t in range(self.max_new_tokens):
-            outs[:, t] = np.where(done, eos_id or 0, np.asarray(tok))
-            if eos_id is not None:
-                done |= np.asarray(tok) == eos_id
-                if done.all():
-                    outs = outs[:, : t + 1]
-                    break
-            logits, cache = self._step(self.params, cache, tok[:, None])
-            tok = self._sample(logits)
-        jax.block_until_ready(logits)
-        t_decode = time.perf_counter() - t0
-        stats = ServeStats(
-            prefill_s=t_prefill, decode_s=t_decode,
-            tokens_generated=int(outs.size),
-        )
-        return outs, stats
+    session = serve(spec)
+    print(session.describe())
+    comps = session.run(
+        synthetic_requests(spec, num_requests,
+                           spread=spec.serve.mode == "continuous")
+    )
+    print(summarize(comps))
+    first = comps[0]
+    print(f"first sequence: {first.tokens[:16].tolist()}")
+    return 0
 
 
 def main(argv=None):
-    from repro.launch.train import PRESETS
+    from repro.api.spec import ExperimentSpec, ModelSpec, ServeSpec
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", type=str, default=None)
     ap.add_argument("--preset", type=str, default="llm-tiny")
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--checkpoint", type=str, default=None,
+                    help="round_*.npz file or checkpoint dir (latest wins)")
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--quantize", choices=("none", "int8", "bf16"),
+                    default="none")
+    ap.add_argument("--rank-slice", action="store_true")
+    ap.add_argument("--materialize", action="store_true",
+                    help="dense U S Vᵀ baseline path")
+    ap.add_argument("--mode", choices=("continuous", "static"),
+                    default="continuous")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg: ModelConfig = (
-        get_config(args.arch) if args.arch else PRESETS[args.preset]
+    bucket = max(8, args.prompt_len // 4)
+    max_prompt = -(-args.prompt_len // bucket) * bucket
+    spec = ExperimentSpec(
+        name=f"serve-{args.arch or args.preset}",
+        seed=args.seed,
+        model=ModelSpec(
+            kind="lm",
+            preset=None if args.arch else args.preset,
+            arch=args.arch,
+            smoke=args.smoke,
+        ),
+        serve=ServeSpec(
+            checkpoint=args.checkpoint,
+            quantize=args.quantize,
+            rank_slice=args.rank_slice,
+            materialize=args.materialize,
+            mode=args.mode,
+            max_batch=args.batch,
+            max_prompt=max_prompt,
+            prompt_bucket=bucket,
+            max_new_tokens=args.new_tokens,
+            temperature=args.temperature,
+        ),
     )
-    if args.smoke:
-        cfg = reduced(cfg)
-    model = build_model(cfg)
-    params, _ = model.init(jax.random.PRNGKey(args.seed))
-    n = sum(x.size for x in jax.tree.leaves(params))
-    print(f"serving {cfg.name} ({n/1e6:.1f}M params), batch={args.batch}")
-
-    rng = np.random.default_rng(args.seed)
-    prompts = [
-        rng.integers(0, cfg.vocab_size, size=rng.integers(4, args.prompt_len + 1))
-        .astype(np.int32)
-        for _ in range(args.batch)
-    ]
-    extra = {}
-    if cfg.family == "vlm":
-        extra["vision_embeds"] = jnp.asarray(
-            rng.standard_normal((args.batch, cfg.vision_tokens, cfg.d_model)),
-            dtype=jnp.float32,
-        )
-    if cfg.family == "audio":
-        extra["frames"] = jnp.asarray(
-            rng.standard_normal((args.batch, cfg.encoder.num_frames, cfg.d_model)),
-            dtype=jnp.float32,
-        )
-
-    server = BatchedServer(
-        model, params, max_new_tokens=args.new_tokens,
-        temperature=args.temperature, seed=args.seed,
-    )
-    outs, stats = server.generate(prompts, extra_inputs=extra)
-    print(f"prefill {stats.prefill_s*1e3:.1f} ms; "
-          f"decode {stats.decode_s*1e3:.1f} ms for {stats.tokens_generated} "
-          f"tokens ({stats.tokens_per_s:.1f} tok/s)")
-    print("first sequence:", outs[0][:16].tolist())
-    return outs, stats
+    return run_session(spec, num_requests=args.requests)
 
 
 if __name__ == "__main__":

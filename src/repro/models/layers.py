@@ -276,10 +276,18 @@ def attention(
     is what lets prefill_32k lower within HBM on the target mesh.  The
     mask combines causality and an optional sliding window; ``positions``
     are absolute so the same code serves ragged decode (cache) layouts.
+
+    Positions may carry a leading batch dim — ``q_positions`` ``(B, Tq)``
+    and/or ``kv_positions`` ``(B, Tk)`` — for *per-slot* ragged decode
+    (continuous batching: each cache row at its own sequence position).
+    Batched positions take the single-block path; per-slot decode is
+    ``Tq == 1``, so chunking never applies there anyway.
     """
     Tq = q.shape[1]
     q_chunk = q_chunk or Tq
     q_chunk = min(q_chunk, Tq)
+    if q_positions.ndim > 1 or kv_positions.ndim > 1:
+        q_chunk = Tq
     # Under sequence parallelism each shard already holds only Tq/msize
     # query rows; chunking below that size fights the sharding (the chunk
     # reshape forces per-iteration q gathers).  Skip chunking when the
@@ -292,18 +300,21 @@ def attention(
             q_chunk = Tq
 
     def mask_for(qpos, kpos):
-        # negative kv positions mark never-written cache slots
-        m = (kpos >= 0)[None, :] & (qpos >= 0)[:, None]
+        # negative kv positions mark never-written cache slots; the
+        # broadcasting form yields (Tq, Tk) for shared positions and
+        # (B, Tq, Tk) when either side is per-slot
+        m = (kpos[..., None, :] >= 0) & (qpos[..., :, None] >= 0)
         if causal:
-            m &= kpos[None, :] <= qpos[:, None]
+            m &= kpos[..., None, :] <= qpos[..., :, None]
         if sliding_window:
-            m &= kpos[None, :] > qpos[:, None] - sliding_window
+            m &= kpos[..., None, :] > qpos[..., :, None] - sliding_window
         return m
 
     def block(qc, qpos):
         s = _gqa_scores(qc, k).astype(jnp.float32)  # (B,H,qc,Tk)
         m = mask_for(qpos, kv_positions)
-        s = jnp.where(m[None, None], s, -1e30)
+        m = m[:, None] if m.ndim == 3 else m[None, None]
+        s = jnp.where(m, s, -1e30)
         p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
         return _gqa_combine(p, v)
 

@@ -163,10 +163,19 @@ def build_model(cfg: ModelConfig) -> Model:
         return rms_norm(h, params["final_norm"], cfg.norm_eps), caches, aux
 
     # ------------------------------------------------------------ serving
-    def init_cache(params, batch: int, cache_len: int):
+    def init_cache(params, batch: int, cache_len: int, *, per_slot: bool = False):
+        """``per_slot=True``: positions tracked per batch row — ``pos`` is
+        (batch,) and the attention write indices are (NB, batch) — so a
+        continuous-batching engine can admit a new request into a freed
+        slot while the others keep decoding (decoder-only families)."""
+        if per_slot and cfg.is_encdec:
+            raise ValueError(
+                "per-slot decode needs per-row positions; the enc-dec "
+                "sinusoidal lookup indexes one shared position"
+            )
         cache = {
-            "stack": init_cache_stack(cfg, batch, cache_len, dt),
-            "pos": jnp.zeros((), jnp.int32),
+            "stack": init_cache_stack(cfg, batch, cache_len, dt, per_slot=per_slot),
+            "pos": jnp.zeros((batch,) if per_slot else (), jnp.int32),
         }
         if cfg.is_encdec:
             cache["enc_h"] = jnp.zeros(
@@ -174,8 +183,16 @@ def build_model(cfg: ModelConfig) -> Model:
             )
         return cache
 
-    def serve_prefill(params, batch, cache_len: int = 0):
-        """Process the full prompt; returns (last-token logits, cache)."""
+    def serve_prefill(params, batch, cache_len: int = 0, last_index=None):
+        """Process the full prompt; returns (last-token logits, cache).
+
+        ``last_index`` (traced i32, optional) reads the logits at that
+        sequence position instead of the final one and stamps ``pos`` to
+        ``last_index + 1`` — right-padded prompts stay exact: the causal
+        mask keeps pad keys out of every real query, and the serving
+        engine's slot insert truncates the cache index to the true length
+        so stale pad entries are masked (kv_pos > newest ⇒ negative).
+        """
         tokens = batch["tokens"]  # (B, S)
         B, S = tokens.shape
         emb = apply_embedding(
@@ -198,18 +215,27 @@ def build_model(cfg: ModelConfig) -> Model:
         )
         h = rms_norm(h, params["final_norm"], cfg.norm_eps)
         cache["stack"] = new_stack
-        cache["pos"] = jnp.int32(emb.shape[1])
-        logits = _logits(params, h[:, -1:], cfg.kernels)[:, 0]
+        if last_index is None:
+            cache["pos"] = jnp.int32(emb.shape[1])
+            h_last = h[:, -1:]
+        else:
+            last = jnp.asarray(last_index, jnp.int32)
+            cache["pos"] = last + 1
+            h_last = jax.lax.dynamic_slice_in_dim(h, last, 1, axis=1)
+        logits = _logits(params, h_last, cfg.kernels)[:, 0]
         return logits, cache
 
     def serve_step(params, cache, tokens):
-        """One decode step.  tokens: (B, 1) → (logits (B, vocab), cache)."""
+        """One decode step.  tokens: (B, 1) → (logits (B, vocab), cache).
+
+        With a per-slot cache (``pos`` shaped (B,)), positions broadcast
+        to (B, T) and every row attends at its own depth."""
         B = tokens.shape[0]
         emb = apply_embedding(
             params["embed"], tokens, dtype=jnp.float32, kernels=cfg.kernels
         ).astype(dt)
         pos = cache["pos"]
-        positions = pos[None] + jnp.arange(tokens.shape[1])
+        positions = pos[..., None] + jnp.arange(tokens.shape[1])
         cross_kv = cache.get("enc_h") if cfg.is_encdec else None
         if cfg.is_encdec:
             pe = sinusoidal_positions(8192, cfg.d_model, dt)

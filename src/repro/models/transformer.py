@@ -121,7 +121,10 @@ def attn_mix(
     """Self-attention (+ optional cached decode, + optional cross-attn block).
 
     cache: {"k": (B,S,Hkv,hd), "v": ..., "idx": scalar int32} or None.
-    Returns (y, new_cache).
+    A *per-slot* cache carries ``idx`` of shape (B,) instead — one write
+    position per sequence (continuous batching admits requests into freed
+    slots, so rows decode at different depths); ``positions`` is then
+    (B, T).  Returns (y, new_cache).
     """
     B, T, d = x.shape
     H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
@@ -146,14 +149,26 @@ def attn_mix(
         # ring/linear write at idx (mod cache length).  NOTE: a multi-token
         # write (prefill) must not wrap: callers size the prefill cache at
         # ≥ prompt length; decode writes are single-token and wrap freely.
-        slot = (cache["idx"] % S).astype(jnp.int32)
-        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
-        # absolute position held by each slot: the newest p ≤ newest-written
-        # position with p % S == s; slots never written → negative → masked.
-        s_idx = jnp.arange(S, dtype=jnp.int32)
-        newest = cache["idx"].astype(jnp.int32) + T - 1
-        kv_pos = newest - ((newest - s_idx) % S)
+        idx = cache["idx"]
+        if idx.ndim:  # per-slot (B,): each row writes at its own position
+            slot = (idx % S).astype(jnp.int32)
+            write = lambda cb, xb, sb: jax.lax.dynamic_update_slice(
+                cb, xb, (sb, 0, 0)
+            )
+            ck = jax.vmap(write)(cache["k"], k.astype(cache["k"].dtype), slot)
+            cv = jax.vmap(write)(cache["v"], v.astype(cache["v"].dtype), slot)
+            s_idx = jnp.arange(S, dtype=jnp.int32)[None, :]
+            newest = idx.astype(jnp.int32)[:, None] + T - 1  # (B, 1)
+            kv_pos = newest - ((newest - s_idx) % S)  # (B, S)
+        else:
+            slot = (idx % S).astype(jnp.int32)
+            ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+            # absolute position held by each slot: the newest p ≤ newest-
+            # written position with p % S == s; never written → negative.
+            s_idx = jnp.arange(S, dtype=jnp.int32)
+            newest = idx.astype(jnp.int32) + T - 1
+            kv_pos = newest - ((newest - s_idx) % S)
         kv_pos = jnp.where(kv_pos < 0, jnp.int32(-(10**9)), kv_pos)
         y = attention(
             q, ck, cv,
@@ -243,17 +258,25 @@ def block_apply(
 # ---------------------------------------------------------------------------
 
 
-def init_cache_stack(cfg: ModelConfig, batch: int, cache_len: int, dtype) -> dict:
-    """Per-position cache stacks (leading dim = superblocks)."""
+def init_cache_stack(
+    cfg: ModelConfig, batch: int, cache_len: int, dtype, *,
+    per_slot: bool = False,
+) -> dict:
+    """Per-position cache stacks (leading dim = superblocks).
+
+    ``per_slot=True`` makes the attention write index a vector over the
+    batch — (NB, batch) instead of (NB,) — so a serving engine can hold
+    sequences at different positions in one decode batch."""
     NB = cfg.superblocks
     Hkv, hd = cfg.num_kv_heads, cfg.hd
+    idx_shape = (NB, batch) if per_slot else (NB,)
     caches = {}
     for i, kind in enumerate(cfg.block_pattern):
         if kind == "attn":
             c = {
                 "k": jnp.zeros((NB, batch, cache_len, Hkv, hd), dtype),
                 "v": jnp.zeros((NB, batch, cache_len, Hkv, hd), dtype),
-                "idx": jnp.zeros((NB,), jnp.int32),
+                "idx": jnp.zeros(idx_shape, jnp.int32),
             }
         elif kind == "mamba":
             c = jax.tree.map(

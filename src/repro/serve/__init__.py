@@ -1,0 +1,23 @@
+"""Low-rank serving: factor-resident decode + continuous batching.
+
+Construction goes through ``repro.api.experiment.serve(spec)`` — the
+RPL001 engine-construction rule covers :class:`ServeEngine` and
+:class:`ContinuousScheduler` the same way it covers the training engines.
+"""
+from repro.serve.engine import ServeEngine, decode_matmul_flops  # noqa: F401
+from repro.serve.quantize import (  # noqa: F401
+    QUANT_MODES,
+    QuantizedFactor,
+    dequantize_params,
+    materialize_params,
+    quantization_error_bound,
+    quantize_params,
+    rank_slice_params,
+    resident_bytes,
+)
+from repro.serve.scheduler import (  # noqa: F401
+    SCHED_MODES,
+    Completion,
+    ContinuousScheduler,
+    Request,
+)

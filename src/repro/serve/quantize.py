@@ -1,0 +1,231 @@
+"""At-rest factor compression for serving.
+
+Three independent knobs on a checkpointed factorized pytree:
+
+- **int8** (:func:`quantize_params` with ``mode="int8"``): per-*column*
+  affine quantization of ``U`` and ``V`` — the at-rest twin of the wire's
+  ``int8_affine`` codec (`repro.fed.wire.Int8AffineCodec`), reusing its
+  scale formula ``scale = (hi − lo)/255`` with ``q = round((x−lo)/scale) −
+  128``, so the absolute dequantization error is bounded by ``scale/2`` per
+  element.  Per-column (axis ``-2`` reduction) rather than the wire's
+  per-tensor: serving factors are long-lived, so we spend ``8·r_max`` bytes
+  of (lo, scale) per factor to keep each basis column's range tight — and,
+  crucially, an **inactive column is exactly zero** (the zero-inactive-
+  columns invariant), so its ``lo = hi = 0`` and it dequantizes to exactly
+  ``0.0``: quantization cannot leak stale directions past the rank mask.
+  ``S`` (``r_max × r_max``, tiny) stays f32.
+- **bf16** (``mode="bf16"``): plain ``U``/``V`` downcast; ``S`` stays f32.
+- **rank slicing** (:func:`rank_slice_params`): host-side load transform
+  that drops the exactly-zero columns beyond each factor's active rank,
+  shrinking ``r_max`` to the effective rank.  Sound by the same invariant:
+  ``U S Vᵀ`` is unchanged because every dropped column contributes zero.
+
+:func:`materialize_params` is the dense debug/baseline path (``U S Vᵀ``
+densified per factor); :func:`resident_bytes` prices what a prepared pytree
+keeps resident on device.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.factorization import (
+    LowRankFactor,
+    is_factor,
+    mask_coeff,
+    materialize,
+    rank_mask,
+)
+
+Array = jax.Array
+
+QUANT_MODES = ("none", "int8", "bf16")
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["u_q", "u_lo", "u_scale", "v_q", "v_lo", "v_scale", "S", "rank"],
+    meta_fields=[],
+)
+@dataclasses.dataclass
+class QuantizedFactor:
+    """int8 at-rest form of a :class:`LowRankFactor`.
+
+    ``u_q``/``v_q`` are int8 buffers with per-column affine params
+    ``(lo, scale)`` shaped ``(..., 1, r_max)``; ``S`` and ``rank`` ride
+    through unchanged.  The int8 buffers stay resident on device — dequant
+    happens inside the serving engine's jitted executables, immediately
+    before the factor feeds ``lowrank_apply``.
+    """
+
+    u_q: Array
+    u_lo: Array
+    u_scale: Array
+    v_q: Array
+    v_lo: Array
+    v_scale: Array
+    S: Array
+    rank: Array
+
+    @property
+    def r_max(self) -> int:
+        return self.u_q.shape[-1]
+
+    @property
+    def n_in(self) -> int:
+        return self.u_q.shape[-2]
+
+    @property
+    def n_out(self) -> int:
+        return self.v_q.shape[-2]
+
+
+def is_quantized(x) -> bool:
+    return isinstance(x, QuantizedFactor)
+
+
+def _factor_like(x) -> bool:
+    return is_factor(x) or is_quantized(x)
+
+
+def _affine_encode(x: Array):
+    """Wire-formula int8 affine, per basis column (reduce over axis -2)."""
+    x = x.astype(jnp.float32)
+    lo = jnp.min(x, axis=-2, keepdims=True)
+    hi = jnp.max(x, axis=-2, keepdims=True)
+    scale = jnp.maximum((hi - lo) / 255.0, jnp.finfo(jnp.float32).tiny)
+    q = jnp.clip(jnp.round((x - lo) / scale) - 128.0, -128, 127)
+    return q.astype(jnp.int8), lo, scale
+
+
+def _affine_decode(q: Array, lo: Array, scale: Array) -> Array:
+    return (q.astype(jnp.float32) + 128.0) * scale + lo
+
+
+def quantize_factor(f: LowRankFactor) -> QuantizedFactor:
+    u_q, u_lo, u_scale = _affine_encode(f.U)
+    v_q, v_lo, v_scale = _affine_encode(f.V)
+    return QuantizedFactor(
+        u_q=u_q, u_lo=u_lo, u_scale=u_scale,
+        v_q=v_q, v_lo=v_lo, v_scale=v_scale,
+        S=f.S, rank=f.rank,
+    )
+
+
+def dequantize_factor(qf: QuantizedFactor) -> LowRankFactor:
+    """int8 → f32 factor; inactive columns re-masked to exactly zero.
+
+    A zero column round-trips exactly (``lo = hi = 0``), but the explicit
+    mask keeps the zero-inactive-columns invariant *structural* rather than
+    numerical — downstream projections never see quantization residue.
+    """
+    m = rank_mask(qf.rank, qf.r_max)
+    u = _affine_decode(qf.u_q, qf.u_lo, qf.u_scale) * m[..., None, :]
+    v = _affine_decode(qf.v_q, qf.v_lo, qf.v_scale) * m[..., None, :]
+    return LowRankFactor(U=u, S=mask_coeff(qf.S, m), V=v, rank=qf.rank)
+
+
+def quantization_error_bound(qf: QuantizedFactor) -> float:
+    """Max absolute per-element dequant error: ``max(scale)/2`` (wire bound)."""
+    worst = jnp.maximum(jnp.max(qf.u_scale), jnp.max(qf.v_scale))
+    return float(worst) / 2.0
+
+
+def quantize_params(params, mode: str):
+    """Apply at-rest compression ``mode`` to every factor leaf.
+
+    ``"none"`` is the identity, ``"bf16"`` downcasts ``U``/``V`` in place
+    (the leaf stays a :class:`LowRankFactor` — ``lowrank_apply`` consumes
+    it unchanged), ``"int8"`` rewrites leaves to :class:`QuantizedFactor`.
+    """
+    if mode not in QUANT_MODES:
+        raise ValueError(f"quantize mode must be one of {QUANT_MODES}, got {mode!r}")
+    if mode == "none":
+        return params
+
+    def one(leaf):
+        if not is_factor(leaf):
+            return leaf
+        if mode == "bf16":
+            return LowRankFactor(
+                U=leaf.U.astype(jnp.bfloat16),
+                S=leaf.S,
+                V=leaf.V.astype(jnp.bfloat16),
+                rank=leaf.rank,
+            )
+        return quantize_factor(leaf)
+
+    return jax.tree.map(one, params, is_leaf=is_factor)
+
+
+def dequantize_params(params):
+    """Restore :class:`LowRankFactor` leaves (identity on everything else).
+
+    Called *inside* the engine's jitted executables so the int8 buffers are
+    what stays resident; the f32 views are transient per-call values.
+    """
+    return jax.tree.map(
+        lambda x: dequantize_factor(x) if is_quantized(x) else x,
+        params,
+        is_leaf=_factor_like,
+    )
+
+
+def _sliced_width(rank, r_max: int) -> int:
+    """Concrete post-slice buffer width: effective rank rounded up to a
+    multiple of 8 (keeps kernel tiles happy), never above ``r_max``."""
+    r = int(np.max(np.asarray(jax.device_get(rank))))
+    r = max(r, 1)
+    return min(-(-r // 8) * 8, r_max)
+
+
+def rank_slice_params(params):
+    """Drop exactly-zero inactive columns from every factor leaf (host-side).
+
+    For a stacked factor (leading layer/expert dims) the slice width is the
+    max active rank across slices — buffers must stay rectangular under
+    jit.  ``U S Vᵀ`` is bit-identical by the zero-inactive-columns
+    invariant; only ``r_max`` (and hence decode FLOPs/bytes) shrinks.
+    """
+
+    def one(leaf):
+        if not is_factor(leaf):
+            return leaf
+        w = _sliced_width(leaf.rank, leaf.r_max)
+        if w == leaf.r_max:
+            return leaf
+        return LowRankFactor(
+            U=leaf.U[..., :, :w],
+            S=leaf.S[..., :w, :w],
+            V=leaf.V[..., :, :w],
+            rank=leaf.rank,
+        )
+
+    return jax.tree.map(one, params, is_leaf=is_factor)
+
+
+def materialize_params(params):
+    """Densify every factor to ``U S Vᵀ`` — the dense decode baseline.
+
+    The model trunk's ``apply_linear``/``apply_embedding`` dispatch on
+    ``is_factor``, so a materialized pytree takes the plain-matmul path
+    with identical math (up to f32 associativity) at dense cost.
+    """
+    return jax.tree.map(
+        lambda x: materialize(x) if is_factor(x) else x,
+        params,
+        is_leaf=is_factor,
+    )
+
+
+def resident_bytes(params) -> int:
+    """Device-resident bytes of a prepared serving pytree.
+
+    QuantizedFactor leaves count their int8 buffers + affine params + f32
+    ``S`` — the dequantized views are transient inside the jitted step and
+    deliberately not charged."""
+    return int(sum(x.nbytes for x in jax.tree.leaves(params)))

@@ -141,6 +141,20 @@ class TelemetryHub:
             attrs=attrs,
         )
 
+    def span_wall_at(self, name: str, t_start: float, t_end: float, **attrs):
+        """Record a completed span on the **wall** clock from explicit
+        :func:`perf_seconds` endpoints — per-request serving phases
+        (queued / decode) whose boundaries interleave across requests, so
+        no single context manager can bracket them."""
+        if not self.enabled:
+            return
+        self._emit(
+            "span", name,
+            t=float(t_start) - self._epoch,
+            dur=float(t_end) - float(t_start),
+            attrs=attrs,
+        )
+
     # -- metrics -----------------------------------------------------------
 
     def counter(self, name: str, inc: float = 1.0, **attrs) -> None:

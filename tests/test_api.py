@@ -29,6 +29,7 @@ from repro.api import (
     FedSpec,
     ModelSpec,
     ParticipationSpec,
+    ServeSpec,
     SimSpec,
     WireSpec,
     build,
@@ -261,6 +262,23 @@ def test_spec_hash_sensitive_to_every_field_change():
                            checkpoint=CheckpointSpec(dir="/tmp/x")),
      "hier engine does not support checkpointing"),
     (lambda: CheckpointSpec(every=-1), "checkpoint.every"),
+    # serve axes
+    (lambda: ServeSpec(quantize="int4"), "serve.quantize"),
+    (lambda: ServeSpec(mode="dynamic"), "serve.mode"),
+    (lambda: ServeSpec(max_batch=0), "serve.max_batch"),
+    (lambda: ServeSpec(max_queue=0), "serve.max_queue"),
+    (lambda: ServeSpec(max_prompt=0), "serve.max_prompt"),
+    (lambda: ServeSpec(prompt_bucket=0), "serve.prompt_bucket"),
+    (lambda: ServeSpec(max_new_tokens=0), "serve.max_new_tokens"),
+    (lambda: ServeSpec(max_batch=8, max_queue=4), "full slot cohort"),
+    (lambda: ServeSpec(max_prompt=20, prompt_bucket=16),
+     "must divide serve.max_prompt"),
+    (lambda: ServeSpec(temperature=-0.5), "serve.temperature"),
+    (lambda: ServeSpec(eos_id=-1), "serve.eos_id"),
+    (lambda: ServeSpec(materialize=True, quantize="int8"),
+     "serve.materialize=True densifies"),
+    (lambda: ServeSpec(materialize=True, rank_slice=True),
+     "nothing to act on once serve.materialize"),
 ], ids=lambda p: p if isinstance(p, str) else "")
 def test_incoherent_combinations_rejected(make, msg):
     with pytest.raises(ValueError, match=msg):
